@@ -1,0 +1,96 @@
+"""Roofline analysis (§Roofline): aggregate dry-run JSON records into the
+per-(arch × shape × mesh) table with the three terms, the dominant
+bottleneck, MODEL_FLOPS ratio, and a what-would-move-it note."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results" / "dryrun"
+
+MOVE_NOTES = {
+    "compute": ("compute-bound: raise useful-FLOPs fraction (less remat, "
+                "fewer replicated-compute fallbacks) or accept — this is "
+                "the roofline target"),
+    "memory": ("HBM-bound: bigger fused blocks (fewer activation "
+               "round-trips), wider flash-attention kv chunks, bf16 "
+               "intermediates"),
+    "collective": ("ICI-bound: shard the residual stream (SP), swap "
+                   "all-gather→reduce-scatter pairs, overlap collectives "
+                   "with compute (latency-hiding scheduler), or compress "
+                   "inter-pod gradients"),
+}
+
+
+def load_records(results_dir: Path = RESULTS_DIR) -> list:
+    recs = []
+    for p in sorted(results_dir.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def roofline_fraction(rec: dict) -> float | None:
+    """Useful-compute time / dominant-term time ≈ achievable MFU bound."""
+    if rec.get("status") != "ok" or not rec.get("hlo_flops_per_device"):
+        return None
+    import math
+    chips = rec["chips"]
+    model_t = rec["model_flops_global"] / chips / 197e12  # useful compute time
+    dom = max(rec["t_compute"], rec["t_memory"], rec["t_collective"])
+    return model_t / dom if dom else None
+
+
+def summarize(results_dir: Path = RESULTS_DIR) -> list:
+    rows = []
+    for rec in load_records(results_dir):
+        row = {"name": f"roofline/{'mp' if rec.get('multi_pod') else 'sp'}/"
+                       f"{rec.get('arch')}/{rec.get('shape')}",
+               "status": rec.get("status")}
+        if rec.get("status") == "ok":
+            row.update({
+                "t_compute_s": round(rec["t_compute"], 4),
+                "t_memory_s": round(rec["t_memory"], 4),
+                "t_collective_s": round(rec["t_collective"], 4),
+                "bottleneck": rec["bottleneck"],
+                "model_flops_ratio": (round(rec["model_flops_ratio"], 4)
+                                      if rec.get("model_flops_ratio") else None),
+                "roofline_fraction": (round(roofline_fraction(rec), 4)
+                                      if roofline_fraction(rec) else None),
+                "fits_hbm": (rec["memory_analysis"]["temp_size_bytes"] or 0)
+                < 16 * 2**30,
+            })
+        elif rec.get("status") == "skipped":
+            row["reason"] = rec.get("reason", "")[:60]
+        else:
+            row["error"] = rec.get("error", "")[:80]
+        rows.append(row)
+    return rows
+
+
+def markdown_table(results_dir: Path = RESULTS_DIR) -> str:
+    recs = [r for r in load_records(results_dir) if not r.get("multi_pod")]
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "bottleneck | MODEL/HLO | roofline frac | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped | — | — | {rec['reason'][:50]} |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"ERROR | — | — | {rec.get('error','')[:50]} |")
+            continue
+        rf = roofline_fraction(rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['t_compute']:.3f} | "
+            f"{rec['t_memory']:.3f} | {rec['t_collective']:.3f} | "
+            f"{rec['bottleneck']} | "
+            f"{rec['model_flops_ratio']:.3f} | "
+            f"{rf:.3f} | {MOVE_NOTES[rec['bottleneck']][:40]}… |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

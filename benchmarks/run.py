@@ -1,0 +1,111 @@
+"""Benchmark driver: one section per paper table / deliverable.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * table2/*      — photonic cost model vs the paper's Table 2 numbers
+  * table1/*      — CI-scale Table-1 reproduction (val-MSE ordering)
+  * kernels/*     — tt_contract + flash_attention vs refs (CPU wall time;
+                    derived = max |err| vs oracle)
+  * roofline/*    — aggregated dry-run roofline terms (derived = roofline
+                    fraction; run launch/dryrun.py first to populate)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, n=5):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_kernels(rows):
+    from repro.core import tt
+    from repro.kernels import ops, ref
+
+    spec = tt.PAPER_TONN_SPEC
+    cores = tt.tt_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4200, 1024))
+    y_ref = ref.tt_contract_ref(x, cores, spec)
+    f_ref = jax.jit(lambda: ref.tt_contract_ref(x, cores, spec))
+    us_ref = _time(f_ref)
+    y_k = ops.tt_linear(x, cores, spec, mode="interpret")
+    err = float(jnp.max(jnp.abs(y_k - y_ref)))
+    rows.append({"name": "kernels/tt_contract_ref_1024(batch=4200)",
+                 "us_per_call": round(us_ref, 1), "derived": f"err={err:.1e}"})
+
+    B, H, KH, S, D = 1, 8, 2, 1024, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, KH, S, D))
+    v = jax.random.normal(ks[2], (B, KH, S, D))
+    from repro.models.flash import flash_attention_hlo
+    f_fa = jax.jit(lambda: flash_attention_hlo(q, k, v, True, 0, 256, 256))
+    us = _time(f_fa)
+    err = float(jnp.max(jnp.abs(f_fa() - ref.attention_ref(q, k, v))))
+    rows.append({"name": "kernels/flash_attention_hlo(1x8x1024x64)",
+                 "us_per_call": round(us, 1), "derived": f"err={err:.1e}"})
+
+
+def bench_zo_step(rows):
+    """Paper's training loop: one full BP-free step (11 loss evals × 42
+    FD inferences × batch 100) on the TT-1024 PINN."""
+    from repro.core import pinn, zoo
+    cfg = pinn.PINNConfig(hidden=1024, mode="tt", tt_rank=2, tt_L=4)
+    model = pinn.HJBPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    xt = pinn.sample_collocation(jax.random.PRNGKey(1), 100)
+    scfg = zoo.SPSAConfig(num_samples=10, mu=0.01)
+    state = zoo.ZOState.create(0)
+
+    @jax.jit
+    def step(p, s):
+        lf = lambda q: pinn.hjb_residual_loss(model, q, xt)
+        return zoo.zo_signsgd_step(lf, p, s, lr=1e-3, cfg=scfg)
+
+    us = _time(lambda: step(params, state)[2], n=3)
+    rows.append({"name": "zo/tt1024_full_step(11x42x100 inferences)",
+                 "us_per_call": round(us, 1),
+                 "derived": "1536 trainable params"})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table1-epochs", type=int, default=300)
+    ap.add_argument("--skip-table1", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    rows: list = []
+    from benchmarks import table2_cost
+    rows += table2_cost.run()
+    bench_kernels(rows)
+    bench_zo_step(rows)
+    if not args.skip_table1:
+        from benchmarks import table1_hjb
+        rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)
+    try:
+        from benchmarks import roofline
+        rows += roofline.summarize()
+    except Exception as e:  # noqa: BLE001
+        rows.append({"name": "roofline/unavailable", "derived": repr(e)})
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = r.pop("derived", json.dumps(r, default=str))
+        print(f"{name},{us},{json.dumps(derived, default=str) if not isinstance(derived, str) else derived}")
+
+
+if __name__ == "__main__":
+    main()

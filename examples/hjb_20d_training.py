@@ -1,0 +1,36 @@
+"""Paper §4 experiment at full configuration: Table-1 rows for the 20-dim
+HJB PDE (ONN/TONN × off-chip/on-chip × noise).
+
+Full fidelity (hidden=1024, mode=tonn with per-core MZI meshes, 5000 epochs)
+takes hours on 1 CPU core; defaults here are sized to finish in ~15 minutes
+while preserving the paper's ORDERING claims.  Raise --hidden/--epochs to
+paper scale on a bigger machine.
+
+    PYTHONPATH=src python examples/hjb_20d_training.py --hidden 64 --epochs 800
+"""
+import argparse
+import json
+
+from benchmarks.table1_hjb import run_row
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--hidden", type=int, default=64)
+ap.add_argument("--epochs", type=int, default=800)
+ap.add_argument("--tonn", action="store_true",
+                help="use true per-core MZI-mesh params (slower, exact)")
+args = ap.parse_args()
+
+rows = []
+for mode, on_chip, noise, label in [
+    ("dense", False, False, "ONN  off-chip w/o noise (pre-map)"),
+    ("tt", False, False, "TONN off-chip w/o noise (pre-map)"),
+    ("tt", False, True, "TONN off-chip mapped to noisy hw"),
+    ("tonn" if args.tonn else "tt", True, True, "TONN on-chip ZO w/ noise (PROPOSED)"),
+]:
+    r = run_row(mode, on_chip, noise, hidden=args.hidden, epochs=args.epochs)
+    r["label"] = label
+    rows.append(r)
+    print(f"{label:42s} val MSE (mapped) {r['val_mse_mapped']:.2e} "
+          f"(ideal {r['val_mse_ideal']:.2e})  params {r['params']}  {r['seconds']}s")
+
+print(json.dumps(rows, indent=2))

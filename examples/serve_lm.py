@@ -1,0 +1,22 @@
+"""Batched serving example: continuous-batching engine over the reduced
+mamba2 config (O(1) decode state — the long-context family).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+
+from repro import configs
+from repro.launch.serve import Request, ServingEngine
+from repro.models import api
+
+cfg = configs.get_reduced("mamba2-780m")
+params = api.init_params(cfg, jax.random.PRNGKey(0))
+engine = ServingEngine(cfg, params, slots=4, max_len=128)
+
+for i in range(6):
+    engine.submit(Request(prompt=[1 + i, 2 + i, 3 + i], max_new_tokens=8))
+
+done = engine.run()
+for i, r in enumerate(done):
+    print(f"req {i}: prompt {r.prompt} -> {r.out}")
+print(f"served {len(done)} requests")

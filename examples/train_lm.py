@@ -1,0 +1,21 @@
+"""End-to-end LM training driver: train a reduced assigned architecture for
+a few hundred steps on CPU with checkpoint/resume and the straggler
+watchdog — the same launcher a pod run would use.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2.5-3b --steps 200
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2.5-3b")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+args = ap.parse_args()
+
+train_main(["--arch", args.arch, "--reduced",
+            "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+            "--resume", "--log-every", "20"])

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step)
+from repro.checkpoint.remesh import remesh_checkpoint  # noqa: F401

@@ -1,0 +1,30 @@
+"""Elastic re-sharding: restore a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints store full (unsharded) arrays with a self-describing layout, so
+elasticity reduces to recomputing shardings for the new mesh and
+``jax.device_put``-ing each restored array with its new NamedSharding.
+A 512-chip run that loses a pod restarts on 256 chips with the same
+checkpoint; only the sharding rules re-resolve (divisibility fallbacks may
+differ — they are re-reported).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+def remesh_checkpoint(tree: PyTree, new_mesh, report=None,
+                      kind: str = "params") -> PyTree:
+    """Re-place restored (host) arrays onto ``new_mesh`` per the standard
+    param rules.  Works for any pytree that matches the param-rule paths."""
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    shardings = shd.param_shardings(new_mesh, abstract, report)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)

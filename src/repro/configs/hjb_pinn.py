@@ -1,0 +1,14 @@
+"""The paper's own model: TT-compressed 3-layer sine MLP for the 20-dim HJB
+PDE (PINNConfig rather than ModelConfig — this is the photonic side)."""
+from repro.core.pinn import PINNConfig
+from repro.core.photonic import NoiseModel
+
+# paper Table 1 rows
+ONN_OFFCHIP = PINNConfig(hidden=1024, mode="dense")
+ONN_ONCHIP = PINNConfig(hidden=1024, mode="onn",
+                        noise=NoiseModel(enabled=True))
+TONN_OFFCHIP = PINNConfig(hidden=1024, mode="tt", tt_rank=2, tt_L=4)
+TONN_ONCHIP = PINNConfig(hidden=1024, mode="tonn", tt_rank=2, tt_L=4,
+                         noise=NoiseModel(enabled=True))
+
+REDUCED = PINNConfig(hidden=64, mode="tt", tt_rank=2, tt_L=3)

@@ -1,0 +1,5 @@
+"""Core paper contribution: TT compression, photonic simulation, BP-free
+(zeroth-order) training, BP-free derivative estimation, the HJB PINN, and
+the photonic cost model."""
+
+from repro.core import costmodel, photonic, pinn, stein, tt, zoo  # noqa: F401

@@ -1,0 +1,364 @@
+"""Photonic MZI-mesh simulator — the paper's hardware substrate (§2.1, §4.1).
+
+The paper implements a weight matrix ``W = U Σ V*`` where the unitaries are
+meshes of 2×2 MZI rotators, each rotator ``R(φ)`` realized by one MZI (two
+phase shifters + two 50/50 splitters).  Trainable parameters are the phases
+``Φ``; hardware imperfections act on the phases:
+
+    Φ_eff = Ω (Γ ⊙ Φ) + Φ_b
+      Γ   ~ N(γ, σ_γ²)   per-shifter gamma-coefficient drift (fabrication)
+      Ω                  thermal crosstalk between ADJACENT MZIs (banded mix)
+      Φ_b ~ U(0, 2π)·β   phase bias from manufacturing error
+
+(the paper's objective Φ* = argmin L(W(ΩΓΦ + Φ_b))).
+
+Everything here is real-valued (the paper's rotators are 2-D rotations).  A
+mesh is a leveled sequence of disjoint Givens rotations; we schedule an
+arbitrary rotation list into levels (columns) greedily, so both the
+rectangular (Clements-style) from-scratch layout and the QR/Reck
+decomposition of an existing matrix share one apply path:
+
+  * ``rectangular_layout(P)``          — P columns of alternating pairs,
+                                         P(P-1)/2 MZIs (from-scratch training)
+  * ``decompose_orthogonal(U)``        — Givens-QR nulling → (layout, phases,
+                                         diag) s.t. mesh == U (maps off-chip-
+                                         trained weights onto hardware)
+  * ``mesh_apply(layout, phases, d, x)``  — y = U x, scan over levels, scatter
+                                         into a scratch lane so padded slots
+                                         never collide
+  * ``PhotonicMatrix``                 — W = U Σ Vᵀ wrapper with param
+                                         init / from_dense / apply / to_dense
+  * ``NoiseModel``                     — sample + apply the three imperfections
+
+Design notes (TPU adaptation, see DESIGN.md §2): the mesh is *simulated* —
+for BP baselines we differentiate through the scan; for the paper's proposed
+on-chip ZO training only forward applications are used, matching the
+"inference-only" property of the real chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MeshLayout",
+    "rectangular_layout",
+    "schedule_ops",
+    "decompose_orthogonal",
+    "mesh_apply",
+    "mesh_matrix",
+    "NoiseModel",
+    "PhotonicMatrix",
+    "mzi_count_matrix",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mesh layout & scheduling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshLayout:
+    """Leveled mesh: level ``c`` applies rotations on wire pairs
+    ``(idx_a[c,k], idx_b[c,k])`` for every unmasked slot ``k``.
+    Padded slots point at the scratch wire ``P`` (see mesh_apply)."""
+
+    ports: int
+    idx_a: np.ndarray  # (levels, slots) int32
+    idx_b: np.ndarray  # (levels, slots) int32
+    mask: np.ndarray   # (levels, slots) bool
+
+    @property
+    def levels(self) -> int:
+        return self.idx_a.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.idx_a.shape[1]
+
+    @property
+    def num_mzis(self) -> int:
+        return int(self.mask.sum())
+
+    def phase_shape(self) -> tuple:
+        return (self.levels, self.slots)
+
+
+def schedule_ops(ports: int, ops: Sequence[tuple]) -> MeshLayout:
+    """Greedy level-schedule an ordered rotation list [(a, b), ...] into
+    columns of disjoint pairs, preserving relative order on shared wires."""
+    wire_level = np.full(ports, -1, dtype=np.int64)  # last level touching wire
+    levels: list = []
+    for (a, b) in ops:
+        lvl = int(max(wire_level[a], wire_level[b])) + 1
+        while len(levels) <= lvl:
+            levels.append([])
+        levels[lvl].append((a, b))
+        wire_level[a] = lvl
+        wire_level[b] = lvl
+    n_levels = max(1, len(levels))
+    slots = max(1, max((len(l) for l in levels), default=1))
+    idx_a = np.full((n_levels, slots), ports, dtype=np.int32)  # pad -> scratch
+    idx_b = np.full((n_levels, slots), ports, dtype=np.int32)
+    mask = np.zeros((n_levels, slots), dtype=bool)
+    for c, lvl in enumerate(levels):
+        for k, (a, b) in enumerate(lvl):
+            idx_a[c, k] = a
+            idx_b[c, k] = b
+            mask[c, k] = True
+    return MeshLayout(ports=ports, idx_a=idx_a, idx_b=idx_b, mask=mask)
+
+
+def rectangular_layout(ports: int) -> MeshLayout:
+    """Clements-style rectangular arrangement: ``ports`` columns alternating
+    even/odd pair offsets; exactly P(P-1)/2 MZIs."""
+    ops = []
+    for c in range(ports):
+        off = c % 2
+        for a in range(off, ports - 1, 2):
+            ops.append((a, a + 1))
+    layout = schedule_ops(ports, ops)
+    assert layout.num_mzis == ports * (ports - 1) // 2, layout.num_mzis
+    return layout
+
+
+def decompose_orthogonal(u: np.ndarray) -> tuple:
+    """Givens-QR (Reck-ordered) decomposition of a real orthogonal matrix.
+
+    Returns ``(layout, phases, diag)`` with ``mesh_matrix(layout, phases,
+    diag) == u`` (up to float error).  Nulling: G_K … G_1 U = D (diag ±1), so
+    U = G_1ᵀ … G_Kᵀ D; application order is D first then Gᵀ in reverse.
+    """
+    u = np.asarray(u, dtype=np.float64)
+    P = u.shape[0]
+    assert u.shape == (P, P)
+    r = u.copy()
+    nulling: list = []  # (a, b, theta) in nulling order
+    for c in range(P - 1):
+        for row in range(P - 1, c, -1):
+            a, b = row - 1, row
+            x, y = r[a, c], r[b, c]
+            if abs(y) < 1e-300:
+                theta = 0.0
+            else:
+                theta = math.atan2(y, x)
+            ca, sa = math.cos(theta), math.sin(theta)
+            # G = [[ca, sa], [-sa, ca]] acting on rows (a, b) zeroes r[b, c]
+            ra, rb = r[a].copy(), r[b].copy()
+            r[a] = ca * ra + sa * rb
+            r[b] = -sa * ra + ca * rb
+            nulling.append((a, b, theta))
+    diag = np.sign(np.diag(r)).astype(np.float64)
+    diag[diag == 0] = 1.0
+    # application order: reversed nulling, each Gᵀ = rotation by +theta applied
+    # as mesh op R(phi) = [[cos, -sin], [sin, cos]]; Gᵀ = [[ca, -sa],[sa, ca]]
+    ops = [(a, b) for (a, b, _) in reversed(nulling)]
+    layout = schedule_ops(P, ops)
+    phases = np.zeros(layout.phase_shape(), dtype=np.float64)
+    # refill phases in the same traversal order schedule_ops used
+    wire_level = np.full(P, -1, dtype=np.int64)
+    counters = np.zeros(layout.levels, dtype=np.int64)
+    for (a, b, theta) in reversed(nulling):
+        lvl = int(max(wire_level[a], wire_level[b])) + 1
+        k = counters[lvl]
+        counters[lvl] += 1
+        assert layout.idx_a[lvl, k] == a and layout.idx_b[lvl, k] == b
+        phases[lvl, k] = theta
+        wire_level[a] = lvl
+        wire_level[b] = lvl
+    return layout, jnp.asarray(phases, dtype=jnp.float32), jnp.asarray(diag, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mesh application
+# ---------------------------------------------------------------------------
+
+def mesh_apply(layout: MeshLayout, phases: jax.Array, diag: jax.Array,
+               x: jax.Array, transpose: bool = False) -> jax.Array:
+    """Apply the mesh unitary ``U`` (or ``Uᵀ``) to ``x`` with trailing dim P.
+
+    U x computed as: x ← D x, then levels 0..C-1 each applying disjoint
+    rotations R(φ)=[[c,-s],[s,c]] on wire pairs.  ``transpose=True`` runs
+    levels in reverse with negated angles and applies D last.
+    """
+    P = layout.ports
+    batch_shape = x.shape[:-1]
+    xf = x.reshape(-1, P)
+    # scratch wire at index P absorbs padded scatter slots
+    xf = jnp.concatenate([xf, jnp.zeros_like(xf[:, :1])], axis=-1)
+
+    idx_a = jnp.asarray(layout.idx_a)
+    idx_b = jnp.asarray(layout.idx_b)
+    mask = jnp.asarray(layout.mask)
+
+    if not transpose:
+        xf = xf.at[:, :P].multiply(diag[None, :].astype(xf.dtype))
+
+    def level(carry, inp):
+        xc = carry
+        ia, ib, m, ph = inp
+        if transpose:
+            ph = -ph
+        a = xc[:, ia]  # (B, slots)
+        b = xc[:, ib]
+        c = jnp.cos(ph).astype(xc.dtype)[None, :]
+        s = jnp.sin(ph).astype(xc.dtype)[None, :]
+        na = c * a - s * b
+        nb = s * a + c * b
+        mm = m[None, :]
+        na = jnp.where(mm, na, a)
+        nb = jnp.where(mm, nb, b)
+        xc = xc.at[:, ia].set(na, mode="drop")
+        xc = xc.at[:, ib].set(nb, mode="drop")
+        return xc, None
+
+    seq = (idx_a, idx_b, mask, phases)
+    if transpose:
+        seq = jax.tree.map(lambda t: jnp.flip(t, axis=0), seq)
+    xf, _ = jax.lax.scan(level, xf, seq)
+
+    if transpose:
+        xf = xf.at[:, :P].multiply(diag[None, :].astype(xf.dtype))
+    return xf[:, :P].reshape(*batch_shape, P)
+
+
+def mesh_matrix(layout: MeshLayout, phases: jax.Array, diag: jax.Array) -> jax.Array:
+    """Densify the mesh unitary: U = mesh_apply(I).  Column convention:
+    mesh_apply computes U @ x, so U[:, j] = mesh_apply(e_j)."""
+    eye = jnp.eye(layout.ports, dtype=jnp.float32)
+    # mesh_apply treats trailing dim as the vector; feed rows of I, get Uᵀ rows
+    ut = mesh_apply(layout, phases, diag, eye)  # row i = U e_i ... careful:
+    # eye rows are basis vectors e_i (trailing dim = wire); result row i = U e_i
+    return ut.T  # so column i of U
+
+
+# ---------------------------------------------------------------------------
+# Noise / imperfection models
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Paper §4.1 hardware imperfections, applied in phase domain."""
+
+    gamma_mean: float = 1.0     # γ nominal
+    gamma_std: float = 0.002    # σ_γ fabrication drift
+    crosstalk: float = 0.005    # κ: thermal coupling to adjacent MZIs (same level)
+    phase_bias_scale: float = 1.0  # β·U(0,2π); 1.0 = paper's full bias
+    enabled: bool = True
+
+    def sample(self, key: jax.Array, phase_shape: tuple) -> dict:
+        if not self.enabled:
+            return {
+                "gamma": jnp.ones(phase_shape, dtype=jnp.float32),
+                "bias": jnp.zeros(phase_shape, dtype=jnp.float32),
+            }
+        k1, k2 = jax.random.split(key)
+        gamma = self.gamma_mean + self.gamma_std * jax.random.normal(k1, phase_shape)
+        bias = self.phase_bias_scale * jax.random.uniform(
+            k2, phase_shape, minval=0.0, maxval=2.0 * math.pi)
+        return {"gamma": gamma.astype(jnp.float32), "bias": bias.astype(jnp.float32)}
+
+    def effective_phases(self, phases: jax.Array, noise: dict) -> jax.Array:
+        """Φ_eff = Ω (Γ ⊙ Φ) + Φ_b.  Ω mixes adjacent slots within a level
+        (nearest physical neighbours on chip)."""
+        if not self.enabled:
+            return phases
+        p = noise["gamma"] * phases
+        if self.crosstalk > 0.0 and p.shape[-1] > 1:
+            left = jnp.pad(p[..., 1:], ((0, 0), (0, 1)))
+            right = jnp.pad(p[..., :-1], ((0, 0), (1, 0)))
+            p = p + self.crosstalk * (left + right)
+        return p + noise["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Photonic matrix  W = U Σ Vᵀ
+# ---------------------------------------------------------------------------
+
+class PhotonicMatrix:
+    """An (out_dim × in_dim) matrix realized as U(Φ_U) Σ Vᵀ(Φ_V).
+
+    Static pieces (layouts) live on the object; trainable pieces are a params
+    dict {"phases_u", "phases_v", "sigma"} plus fixed buffers {"diag_u",
+    "diag_v"}.  ``apply`` computes y = W x for trailing-dim-``in_dim`` x.
+    """
+
+    def __init__(self, out_dim: int, in_dim: int):
+        self.out_dim = out_dim
+        self.in_dim = in_dim
+        self.layout_u = rectangular_layout(out_dim)
+        self.layout_v = rectangular_layout(in_dim)
+        self.k = min(out_dim, in_dim)
+
+    # -- param construction ------------------------------------------------
+    def init(self, key: jax.Array, scale: float | None = None) -> dict:
+        ku, kv, ks = jax.random.split(key, 3)
+        std = scale if scale is not None else math.sqrt(
+            2.0 / (self.in_dim + self.out_dim))
+        # random phases give a Haar-ish orthogonal pair; sigma sets the scale
+        return {
+            "phases_u": 0.1 * jax.random.normal(ku, self.layout_u.phase_shape()),
+            "phases_v": 0.1 * jax.random.normal(kv, self.layout_v.phase_shape()),
+            "sigma": std * math.sqrt(float(self.k)) * jnp.abs(
+                1.0 + 0.1 * jax.random.normal(ks, (self.k,))),
+            "diag_u": jnp.ones((self.out_dim,), dtype=jnp.float32),
+            "diag_v": jnp.ones((self.in_dim,), dtype=jnp.float32),
+        }
+
+    def from_dense(self, w: np.ndarray) -> dict:
+        """Map a trained dense W onto hardware phases (the 'off-chip' path)."""
+        w = np.asarray(w, dtype=np.float64)
+        assert w.shape == (self.out_dim, self.in_dim)
+        u, s, vt = np.linalg.svd(w, full_matrices=True)
+        lu, pu, du = decompose_orthogonal(u)
+        lv, pv, dv = decompose_orthogonal(vt.T)
+        self.layout_u, self.layout_v = lu, lv
+        return {
+            "phases_u": pu, "phases_v": pv,
+            "sigma": jnp.asarray(s[: self.k], dtype=jnp.float32),
+            "diag_u": du, "diag_v": dv,
+        }
+
+    # -- forward -------------------------------------------------------------
+    def apply(self, params: dict, x: jax.Array,
+              noise_model: NoiseModel | None = None,
+              noise: dict | None = None) -> jax.Array:
+        pu, pv = params["phases_u"], params["phases_v"]
+        if noise_model is not None and noise is not None:
+            pu = noise_model.effective_phases(pu, noise["u"])
+            pv = noise_model.effective_phases(pv, noise["v"])
+        # y = U Σ Vᵀ x
+        z = mesh_apply(self.layout_v, pv, params["diag_v"], x, transpose=True)
+        k = self.k
+        sig = params["sigma"].astype(z.dtype)
+        z = z[..., :k] * sig
+        if self.out_dim > k:
+            pad = jnp.zeros(z.shape[:-1] + (self.out_dim - k,), dtype=z.dtype)
+            z = jnp.concatenate([z, pad], axis=-1)
+        return mesh_apply(self.layout_u, pu, params["diag_u"], z)
+
+    def sample_noise(self, key: jax.Array, model: NoiseModel) -> dict:
+        ku, kv = jax.random.split(key)
+        return {"u": model.sample(ku, self.layout_u.phase_shape()),
+                "v": model.sample(kv, self.layout_v.phase_shape())}
+
+    def to_dense(self, params: dict, noise_model: NoiseModel | None = None,
+                 noise: dict | None = None) -> jax.Array:
+        eye = jnp.eye(self.in_dim, dtype=jnp.float32)
+        cols = self.apply(params, eye, noise_model, noise)  # row j = W e_j
+        return cols.T
+
+    @property
+    def num_mzis(self) -> int:
+        return self.layout_u.num_mzis + self.layout_v.num_mzis
+
+
+def mzi_count_matrix(out_dim: int, in_dim: int) -> int:
+    """MZIs for an SVD-implemented (out×in) matrix: two square meshes."""
+    return out_dim * (out_dim - 1) // 2 + in_dim * (in_dim - 1) // 2

@@ -1,0 +1,302 @@
+"""Physics-informed neural networks + the paper's 20-dim HJB benchmark (§2.2, §4).
+
+The PDE (paper Eq. 7):
+
+    ∂_t u + Δu − 0.05 ‖∇_x u‖₂² = −2,
+    u(x, 1) = ‖x‖₁,  x ∈ [0,1]^20, t ∈ [0,1];   exact: u = ‖x‖₁ + 1 − t.
+
+The ansatz  u(x,t;Φ) = (1−t)·f(x,t;Φ) + ‖x‖₁  satisfies the terminal
+condition exactly, so the training loss is the PDE residual alone.
+
+``HJBPinn`` builds the paper's 3-layer MLP (in → n → n → 1, sine activation)
+in four parametrizations:
+
+  * ``dense`` — ideal digital weights (the "off-chip" pre-training model),
+  * ``onn``   — every weight an SVD MZI-mesh ``PhotonicMatrix`` (paper's ONN),
+  * ``tt``    — first two layers TT-compressed (digital TT baseline),
+  * ``tonn``  — TT-cores whose unfoldings are themselves MZI meshes — the
+                paper's proposed hardware; ZO training tunes the phases.
+
+The final n×1 layer is a direct amplitude-encoded weight vector (a photonic
+fan-in needs no MZI mesh), matching the paper's parameter count
+(TT 1024: 2×256 core params + 1024 = 1,536).
+
+All forwards are pure functions of a params pytree → usable under
+``jax.jit``, ``jax.grad`` (off-chip baselines) and the ZO optimizer
+(on-chip, forward-only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import photonic, stein, tt
+
+__all__ = ["PINNConfig", "HJBPinn", "hjb_exact_solution", "sample_collocation",
+           "hjb_residual_loss", "validation_mse"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PINNConfig:
+    space_dim: int = 20
+    hidden: int = 1024
+    mode: str = "tonn"          # dense | onn | tt | tonn
+    tt_rank: int = 2            # paper: ranks [1,2,1,2,1]
+    tt_L: int = 4               # paper: 1024 = [4,8,4,8] · [8,4,8,4]
+    fd_step: float = 1e-2   # < collocation margin; float32-noise/truncation sweet spot
+    deriv: str = "fd"           # fd | stein
+    stein_sigma: float = 5e-2
+    stein_samples: int = 32
+    noise: photonic.NoiseModel = dataclasses.field(
+        default_factory=lambda: photonic.NoiseModel(enabled=False))
+
+    @property
+    def in_dim(self) -> int:
+        return self.space_dim + 1  # (x, t)
+
+
+def hjb_exact_solution(xt: jax.Array) -> jax.Array:
+    """u(x,t) = ‖x‖₁ + 1 − t."""
+    x, t = xt[..., :-1], xt[..., -1]
+    return jnp.sum(jnp.abs(x), axis=-1) + 1.0 - t
+
+
+def sample_collocation(key: jax.Array, n: int, space_dim: int = 20,
+                       margin: float = 0.02) -> jax.Array:
+    """Uniform (x, t) ∈ [margin, 1−margin]^D × [0, 1−margin].
+
+    The margin keeps FD stencils away from the |x| kink at 0 and the domain
+    boundary (the exact solution is smooth inside).
+    """
+    pts = jax.random.uniform(key, (n, space_dim + 1),
+                             minval=margin, maxval=1.0 - margin)
+    return pts
+
+
+class HJBPinn:
+    """The paper's 3-layer sine MLP in a chosen parametrization."""
+
+    def __init__(self, cfg: PINNConfig):
+        self.cfg = cfg
+        h = cfg.hidden
+        if cfg.mode in ("tt", "tonn"):
+            # pad the (x,t) input up to a TT-factorizable width (the paper
+            # folds 21 → 1024 so layer 1 is a 1024×1024 TT matrix)
+            self.in_pad = h if h >= cfg.in_dim else -(-cfg.in_dim // 8) * 8
+        else:
+            self.in_pad = cfg.in_dim
+        # layer dims after padding the input up to the TT-factorizable size
+        self.dims = [(h, self.in_pad), (h, h), (1, h)]
+        if cfg.mode in ("tt", "tonn"):
+            self.specs = [
+                tt.hjb_layer_spec(h, self.in_pad, L=cfg.tt_L, max_rank=cfg.tt_rank),
+                tt.hjb_layer_spec(h, h, L=cfg.tt_L, max_rank=cfg.tt_rank),
+            ]
+        if cfg.mode == "onn":
+            self.photonic = [photonic.PhotonicMatrix(m, n) for (m, n) in self.dims[:2]]
+        if cfg.mode == "tonn":
+            # each TT-core's (r·m × n·r') unfolding is an MZI-mesh matrix
+            self.photonic_cores = [
+                [photonic.PhotonicMatrix(r * m, n * rn) for (r, m, n, rn)
+                 in spec.core_shapes]
+                for spec in self.specs
+            ]
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: dict = {}
+        if cfg.mode == "dense":
+            for i, (m, n) in enumerate(self.dims):
+                std = math.sqrt(2.0 / (m + n))
+                params[f"w{i}"] = std * jax.random.normal(keys[2 * i], (m, n))
+                params[f"b{i}"] = jnp.zeros((m,))
+        elif cfg.mode == "onn":
+            for i, pm in enumerate(self.photonic):
+                params[f"p{i}"] = pm.init(keys[i])
+                params[f"b{i}"] = jnp.zeros((self.dims[i][0],))
+            params["w2"] = (math.sqrt(2.0 / (1 + cfg.hidden))
+                            * jax.random.normal(keys[6], (1, cfg.hidden)))
+            params["b2"] = jnp.zeros((1,))
+        elif cfg.mode in ("tt", "tonn"):
+            for i, spec in enumerate(self.specs):
+                if cfg.mode == "tt":
+                    params[f"cores{i}"] = tt.tt_init(keys[i], spec)
+                else:
+                    sub = jax.random.split(keys[i], spec.L)
+                    # scale each core mesh so the dense product has glorot var
+                    n_paths = float(np.prod(spec.ranks[1:-1])) if spec.L > 1 else 1.0
+                    tgt = 2.0 / (spec.in_dim + spec.out_dim)
+                    per_core = (tgt / n_paths) ** (1.0 / spec.L)
+                    params[f"pcores{i}"] = [
+                        pm.init(sub[k], scale=math.sqrt(per_core))
+                        for k, pm in enumerate(self.photonic_cores[i])
+                    ]
+                params[f"b{i}"] = jnp.zeros((self.dims[i][0],))
+            params["w2"] = (math.sqrt(2.0 / (1 + cfg.hidden))
+                            * jax.random.normal(keys[6], (1, cfg.hidden)))
+            params["b2"] = jnp.zeros((1,))
+        else:
+            raise ValueError(cfg.mode)
+        return params
+
+    def sample_noise(self, key: jax.Array) -> dict | None:
+        """Fabrication noise is sampled ONCE per physical chip and then fixed
+        (on-chip training adapts to it; off-chip mapping suffers from it)."""
+        cfg = self.cfg
+        if not cfg.noise.enabled:
+            return None
+        if cfg.mode == "onn":
+            keys = jax.random.split(key, len(self.photonic))
+            return {f"p{i}": pm.sample_noise(keys[i], cfg.noise)
+                    for i, pm in enumerate(self.photonic)}
+        if cfg.mode == "tonn":
+            out = {}
+            for i, pms in enumerate(self.photonic_cores):
+                keys = jax.random.split(jax.random.fold_in(key, i), len(pms))
+                out[f"pcores{i}"] = [pm.sample_noise(keys[k], cfg.noise)
+                                     for k, pm in enumerate(pms)]
+            return out
+        return None
+
+    # --------------------------------------------------------------- forward
+    def _layer_matvec(self, params: dict, noise: dict | None, i: int,
+                      x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.mode == "dense":
+            return x @ params[f"w{i}"].T
+        if cfg.mode == "onn":
+            pm = self.photonic[i]
+            nz = None if noise is None else noise[f"p{i}"]
+            return pm.apply(params[f"p{i}"], x, cfg.noise if nz else None, nz)
+        spec = self.specs[i]
+        if cfg.mode == "tt":
+            return tt.tt_matvec(params[f"cores{i}"], x, spec)
+        # tonn: densify each (small) core mesh, then run the TT chain
+        cores = []
+        for k, pm in enumerate(self.photonic_cores[i]):
+            nz = None if noise is None else noise[f"pcores{i}"][k]
+            w = pm.to_dense(params[f"pcores{i}"][k],
+                            cfg.noise if nz else None, nz)
+            r, m, n, rn = spec.core_shapes[k]
+            cores.append(w.reshape(r, m, n, rn))
+        return tt.tt_matvec(cores, x, spec)
+
+    def f(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
+        """Base network f(x,t): (B, in_dim) → (B,)."""
+        cfg = self.cfg
+        h = xt
+        if self.in_pad > cfg.in_dim:
+            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - cfg.in_dim,), h.dtype)
+            h = jnp.concatenate([h, pad], axis=-1)
+        for i in range(2):
+            h = self._layer_matvec(params, noise, i, h) + params[f"b{i}"]
+            h = jnp.sin(h)
+        if cfg.mode == "dense":
+            out = h @ params["w2"].T + params["b2"]
+        else:
+            out = h @ params["w2"].T + params["b2"]
+        return out[..., 0]
+
+    def u(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
+        """Transformed ansatz u = (1−t)·f + ‖x‖₁ (terminal condition exact)."""
+        x, t = xt[..., :-1], xt[..., -1]
+        return (1.0 - t) * self.f(params, xt, noise) + jnp.sum(jnp.abs(x), axis=-1)
+
+    # -------------------------------------------------- incremental FD (perf)
+    def _layer1_columns(self, params: dict, noise: dict | None) -> jax.Array:
+        """Columns 0..in_dim of the (effective) first-layer matrix — the FD
+        stencil only ever shifts the input by ±h·e_i, and layer 1 is linear,
+        so its perturbed pre-activations are rank-1 updates of the base one.
+        Cost: one (in_dim × hidden) extraction instead of 2·D extra layer-1
+        matvecs per collocation point (EXPERIMENTS.md §Perf cell 3)."""
+        cfg = self.cfg
+        eye = jnp.eye(cfg.in_dim, self.in_pad, dtype=jnp.float32)
+        return self._layer_matvec(params, noise, 0, eye)      # (in_dim, H)
+
+    def fd_u_stencil(self, params: dict, xt: jax.Array, h: float,
+                     noise: dict | None = None) -> jax.Array:
+        """u at [x, x+h·e_1, x−h·e_1, ..., ±h·e_D+1]: (2·in+1, B) values with
+        layer 1 computed ONCE (incremental rank-1 FD forward)."""
+        cfg = self.cfg
+        B, Din = xt.shape
+        xp = xt
+        if self.in_pad > Din:
+            xp = jnp.concatenate(
+                [xt, jnp.zeros((B, self.in_pad - Din), xt.dtype)], axis=-1)
+        z0 = self._layer_matvec(params, noise, 0, xp) + params["b0"]  # (B,H)
+        cols = self._layer1_columns(params, noise)                    # (Din,H)
+        hcols = h * cols
+        z = jnp.concatenate([z0[None],
+                             z0[None] + hcols[:, None],               # +h e_i
+                             z0[None] - hcols[:, None]], axis=0)      # (2D+1,B,H)
+        a = jnp.sin(z)
+        a = jnp.sin(self._layer_matvec(params, noise, 1,
+                                       a.reshape(-1, cfg.hidden))
+                    + params["b1"])
+        f = (a @ params["w2"].T + params["b2"])[..., 0]
+        f = f.reshape(2 * Din + 1, B)
+        # transform u = (1−t)f + ‖x‖₁ per stencil point
+        x, t = xt[..., :-1], xt[..., -1]
+        l1 = jnp.sum(jnp.abs(x), axis=-1)                             # (B,)
+        u = jnp.empty_like(f)
+        D = cfg.space_dim
+        base = (1.0 - t) * f[0] + l1
+        rows = [base[None]]
+        for sgn, off in ((1.0, 1), (-1.0, 1 + Din)):
+            # spatial coords: ‖x ± h e_i‖₁ = ‖x‖₁ ± sgn(x_i)·h (inside domain)
+            lx = l1[None, :] + sgn * h * jnp.sign(x).T                # (D,B)
+            ux = (1.0 - t)[None, :] * f[off:off + D] + lx
+            # temporal coord: t ± h
+            ut = (1.0 - (t + sgn * h))[None, :] * f[off + D:off + D + 1] \
+                + l1[None, :]
+            rows.append(jnp.concatenate([ux, ut], axis=0))
+        return jnp.concatenate(rows, axis=0)                          # (2D+3… )
+
+
+# ---------------------------------------------------------------------- loss
+
+def hjb_residual_loss(model: HJBPinn, params: dict, xt: jax.Array,
+                      noise: dict | None = None,
+                      key: jax.Array | None = None) -> jax.Array:
+    """BP-free PDE residual loss (paper Eq. 4 restricted to L_r).
+
+    residual = u_t + Δ_x u − 0.05 ‖∇_x u‖² + 2, derivatives estimated by
+    inference-only FD or Stein (cfg.deriv).
+    """
+    cfg = model.cfg
+    f = lambda pts: model.u(params, pts, noise)
+    if cfg.deriv == "fd_fast":
+        # incremental rank-1 FD forward: layer 1 computed once (§Perf cell 3)
+        B, D = xt.shape
+        h = cfg.fd_step
+        vals = model.fd_u_stencil(params, xt, h, noise)
+        u0, up, um = vals[0], vals[1:D + 1], vals[D + 1:]
+        est = stein.DerivativeEstimate(
+            u=u0, grad=((up - um) / (2.0 * h)).T,
+            hess_diag=((up - 2.0 * u0[None] + um) / (h * h)).T)
+    elif cfg.deriv == "fd":
+        est = stein.fd_estimate(f, xt, h=cfg.fd_step)
+    else:
+        assert key is not None, "stein estimator needs a PRNG key"
+        est = stein.stein_estimate(f, xt, key, sigma=cfg.stein_sigma,
+                                   num_samples=cfg.stein_samples)
+    D = cfg.space_dim
+    u_t = est.grad[:, D]
+    grad_x = est.grad[:, :D]
+    lap = jnp.sum(est.hess_diag[:, :D], axis=-1)
+    resid = u_t + lap - 0.05 * jnp.sum(grad_x * grad_x, axis=-1) + 2.0
+    return jnp.mean(resid * resid)
+
+
+def validation_mse(model: HJBPinn, params: dict, xt: jax.Array,
+                   noise: dict | None = None) -> jax.Array:
+    pred = model.u(params, xt, noise)
+    return jnp.mean((pred - hjb_exact_solution(xt)) ** 2)

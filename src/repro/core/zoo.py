@@ -1,0 +1,182 @@
+"""Zeroth-order (BP-free) optimization — the paper's §3.3.
+
+SPSA gradient estimator (paper Eq. 5):
+
+    ∇̂_Φ L(Φ) = Σ_{i=1..N} (1/(Nμ)) [ L(Φ + μ ξ_i) − L(Φ) ] ξ_i ,
+    ξ_i ~ N(0, I_d)
+
+and the ZO-signSGD update (paper Eq. 6):
+
+    Φ_t ← Φ_{t−1} − α · sign(∇̂_Φ L(Φ)).
+
+Everything is expressed over *pytrees* of parameters so the same optimizer
+trains a TT-PINN's phase tensors or any model in the framework.  The loss is
+an arbitrary callable ``loss_fn(params) -> scalar`` — only forward
+evaluations are ever taken (no jax.grad anywhere in this module), which is
+the whole point: on a photonic chip only inference exists.
+
+Distributed ZO (beyond-paper, DESIGN.md §2): the per-perturbation losses
+``L(Φ + μ ξ_i)`` are embarrassingly parallel and each is a *scalar*.  With a
+shared PRNG seed every worker regenerates all ξ_i locally, evaluates its own
+slice of perturbations, and a single ``psum`` of an N-vector of scalars
+reconstructs the exact same gradient estimate everywhere — per-step
+communication is O(N) scalars independent of model size.  This is the
+strongest possible "gradient compression" and is exposed both as a pure
+function (``spsa_gradient`` with ``index_shard``) and through
+``repro.optim.zo_signsgd``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SPSAConfig",
+    "sample_perturbation",
+    "spsa_losses",
+    "spsa_gradient",
+    "spsa_gradient_from_losses",
+    "zo_signsgd_step",
+    "ZOState",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SPSAConfig:
+    num_samples: int = 10     # N in Eq. (5) — paper uses 10 loss evals/step
+    mu: float = 0.01          # sampling radius μ
+    sign_update: bool = True  # Eq. (6) ZO-signSGD de-noising
+    antithetic: bool = False  # optional variance reduction (beyond paper)
+    vectorized: bool = False  # beyond-paper: vmap the N perturbed loss evals
+    #                           (a photonic chip has ONE physical mesh and
+    #                           must run them sequentially; a TPU can batch
+    #                           them — see EXPERIMENTS.md §Perf cell 3)
+
+
+def sample_perturbation(key: jax.Array, params: PyTree) -> PyTree:
+    """One ξ ~ N(0, I) with the same pytree structure as ``params``."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    noise = [jax.random.normal(k, l.shape, dtype=l.dtype)
+             for k, l in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, noise)
+
+
+def _perturb(params: PyTree, xi: PyTree, mu) -> PyTree:
+    return jax.tree.map(lambda p, z: p + mu * z, params, xi)
+
+
+def spsa_losses(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
+                key: jax.Array, cfg: SPSAConfig,
+                index_shard: tuple | None = None) -> jax.Array:
+    """Evaluate the N perturbed losses L(Φ + μ ξ_i).
+
+    ``index_shard=(lo, hi)`` evaluates only i ∈ [lo, hi) (its worker's slice)
+    and returns an N-vector with zeros elsewhere — ready for a cross-worker
+    ``psum`` (distributed ZO; each worker must use the SAME ``key``).
+    """
+    n = cfg.num_samples
+    keys = jax.random.split(key, n)
+
+    def one(i, k):
+        xi = sample_perturbation(k, params)
+        lp = loss_fn(_perturb(params, xi, cfg.mu))
+        if cfg.antithetic:
+            lm = loss_fn(_perturb(params, xi, -cfg.mu))
+            return 0.5 * (lp - lm)  # central estimate folded into "loss delta"
+        return lp
+
+    if cfg.vectorized and index_shard is None:
+        # all N perturbed models evaluated as ONE batched program (TPU-only
+        # optimization: the photonic chip's single mesh is inherently serial)
+        return jax.vmap(one)(jnp.arange(n), keys).astype(jnp.float32)
+
+    losses = []
+    for i in range(n):
+        if index_shard is not None and not (index_shard[0] <= i < index_shard[1]):
+            losses.append(jnp.zeros((), dtype=jnp.float32))
+        else:
+            losses.append(one(i, keys[i]).astype(jnp.float32))
+    return jnp.stack(losses)
+
+
+def spsa_gradient_from_losses(params: PyTree, key: jax.Array,
+                              perturbed_losses: jax.Array,
+                              base_loss: jax.Array,
+                              cfg: SPSAConfig) -> PyTree:
+    """Reconstruct Eq. (5) from the (possibly psum-merged) loss vector.
+
+    Regenerates every ξ_i from ``key`` — deterministic given the shared seed,
+    so all workers materialize identical gradients with no tensor traffic.
+    """
+    n = cfg.num_samples
+    keys = jax.random.split(key, n)
+    if cfg.antithetic:
+        # spsa_losses already returned (L+ − L−)/2; base term cancels
+        deltas = perturbed_losses
+    else:
+        deltas = perturbed_losses - base_loss
+
+    def accum(grad, ik):
+        i, k = ik
+        xi = sample_perturbation(k, params)
+        coef = deltas[i] / (n * cfg.mu)
+        return jax.tree.map(lambda g, z: g + coef * z, grad, xi), None
+
+    zero = jax.tree.map(jnp.zeros_like, params)
+    idx = jnp.arange(n)
+    grad, _ = jax.lax.scan(accum, zero, (idx, keys))
+    return grad
+
+
+def spsa_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
+                  key: jax.Array, cfg: SPSAConfig,
+                  base_loss: jax.Array | None = None,
+                  axis_name: str | None = None,
+                  index_shard: tuple | None = None) -> tuple:
+    """Full Eq. (5): returns (grad, base_loss).
+
+    With ``axis_name`` + ``index_shard`` set, runs the distributed-ZO
+    protocol: local slice of perturbed losses → psum → identical grads.
+    """
+    if base_loss is None:
+        base_loss = loss_fn(params)
+    losses = spsa_losses(loss_fn, params, key, cfg, index_shard=index_shard)
+    if axis_name is not None:
+        losses = jax.lax.psum(losses, axis_name)
+    grad = spsa_gradient_from_losses(params, key, losses, base_loss, cfg)
+    return grad, base_loss
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ZOState:
+    step: jax.Array
+    key: jax.Array
+
+    @classmethod
+    def create(cls, seed: int = 0) -> "ZOState":
+        return cls(step=jnp.zeros((), jnp.int32), key=jax.random.PRNGKey(seed))
+
+
+def zo_signsgd_step(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
+                    state: ZOState, lr: float, cfg: SPSAConfig,
+                    axis_name: str | None = None,
+                    index_shard: tuple | None = None) -> tuple:
+    """One Eq. (6) update: Φ ← Φ − α · sign(∇̂L).  Returns (params, state, loss)."""
+    key, sub = jax.random.split(state.key)
+    grad, base = spsa_gradient(loss_fn, params, sub, cfg,
+                               axis_name=axis_name, index_shard=index_shard)
+    if cfg.sign_update:
+        upd = jax.tree.map(lambda g: jnp.sign(g), grad)
+    else:
+        upd = grad
+    new_params = jax.tree.map(lambda p, u: p - lr * u.astype(p.dtype), params, upd)
+    return new_params, ZOState(step=state.step + 1, key=key), base

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, synthetic_lm_batch, lm_batch_iterator, pde_collocation_iterator)

@@ -1,0 +1,134 @@
+"""Blockwise streaming-softmax attention (FlashAttention) Pallas kernel.
+
+Used by the LM architectures for the 32k-token prefill and training shapes:
+materializing the (Sq × Sk) score matrix at 32k is 4 GiB/head — the blockwise
+kernel keeps one (bq × bk) tile plus running (m, l, acc) statistics in VMEM.
+
+Grid: (batch, q_head, q_block, kv_block) with the kv_block axis innermost
+("arbitrary" semantics — it carries the running softmax state in scratch).
+GQA is folded into the index maps (k/v blocks indexed by ``h // group``), so
+no repeated-KV tensor is ever materialized.  Causal + sliding-window masks
+are applied with absolute positions, so the same kernel serves training
+(Sq == Sk) and chunked prefill (Sq < Sk).
+
+Blocks default to (128, 128) × head_dim — MXU-aligned on TPU.  Query padding
+rows are sliced off after the call; key padding is excluded by an explicit
+validity mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(causal: bool, window: int | None, scale: float,
+            sq: int, sk_valid: int, bq: int, bk: int,
+            q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # absolute positions: queries occupy the LAST sq slots of the timeline
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk_valid - sq)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < sk_valid                       # exclude key padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (bq,)
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)      # fully-masked row → zeros
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D), H % KH == 0 → (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    group = H // KH
+    if scale is None:
+        scale = float(1.0 / np.sqrt(D))
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    Sqp = ((Sq + bq - 1) // bq) * bq
+    Skp = ((Sk + bk - 1) // bk) * bk
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    grid = (B, H, Sqp // bq, Skp // bk)
+
+    kernel = functools.partial(_kernel, causal, window, scale, Sq, Sk, bq, bk)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)
+    return out[:, :, :Sq]

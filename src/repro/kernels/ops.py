@@ -1,0 +1,53 @@
+"""Public jit'd entry points for the Pallas kernels with backend dispatch.
+
+``KernelMode``:
+  * "pallas"     — compiled Pallas (TPU target),
+  * "interpret"  — Pallas interpret=True (CPU validation of the kernel body),
+  * "ref"        — pure-jnp oracle (default on CPU; XLA fuses well enough for
+                   correctness work and the dry-run only lowers HLO anyway).
+
+Model code calls these wrappers and never touches pallas_call directly, so a
+single env var (``REPRO_KERNEL_MODE``) flips the whole framework.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tt as tt_lib
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import tt_contract as _ttc
+
+__all__ = ["kernel_mode", "tt_linear", "attention"]
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_MODE")
+    if mode:
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def tt_linear(x: jax.Array, cores: Sequence[jax.Array], spec: tt_lib.TTSpec,
+              mode: str | None = None) -> jax.Array:
+    mode = mode or kernel_mode()
+    if mode == "ref":
+        return _ref.tt_contract_ref(x, cores, spec)
+    return _ttc.tt_contract(x, tuple(cores), spec,
+                            interpret=(mode == "interpret"))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None, mode: str | None = None) -> jax.Array:
+    mode = mode or kernel_mode()
+    if mode == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=(mode == "interpret"))

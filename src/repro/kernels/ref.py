@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations the kernels are validated against
+(``tests/test_kernels_*.py`` sweeps shapes/dtypes and asserts allclose).
+They are also the fallback path on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tt as tt_lib
+
+__all__ = ["tt_contract_ref", "attention_ref"]
+
+
+def tt_contract_ref(x: jax.Array, cores: Sequence[jax.Array],
+                    spec: tt_lib.TTSpec) -> jax.Array:
+    """y = x @ W(cores)^T via the chain contraction (never densifies W)."""
+    return tt_lib.tt_matvec(cores, x, spec)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Multi-head attention oracle with GQA, causal and sliding-window masks.
+
+    q: (B, H, Sq, D); k, v: (B, KH, Sk, D) with H % KH == 0.
+    ``window``: sliding-window attention — query i sees keys in
+    (i_abs − window, i_abs] where i_abs = i + (Sk − Sq) (decode offset).
+    Returns (B, H, Sq, D).
+    """
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert H % KH == 0
+    group = H // KH
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    q_idx = jnp.arange(Sq)[:, None] + (Sk - Sq)   # absolute positions
+    k_idx = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Fused TT-chain contraction Pallas kernel — the TONN compute primitive.
+
+The paper's photonic TONN-1 design (Fig. 2) multiplies an input by ALL
+TT-cores in one optical pass: intermediates never leave the chip.  The TPU
+analogue (DESIGN.md §2): a naive jnp chain materializes every intermediate
+``(B·M_<k, r·n_k, N_>k)`` tensor in HBM; this kernel keeps the whole chain
+resident in VMEM for one batch tile, so HBM traffic is exactly
+``B·N + B·M + Σ|G_k|`` bytes — the roofline minimum.
+
+Tiling: grid over the flattened batch; each program holds
+  * its ``(bt, N)`` input tile,
+  * every TT-core (they are tiny — the paper's whole point),
+  * the ``(bt, M)`` output tile
+in VMEM.  The per-step matmuls have contracted dims ``r·n_k`` (≤ ~128 for
+practical specs); the batch-tile dim ``bt`` is the MXU-aligned (≥128) axis.
+
+VMEM budget: bt·(N + M + max intermediate)·4B; choose bt so this stays ≲8 MB
+(``default_batch_tile``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import tt as tt_lib
+
+__all__ = ["tt_contract", "default_batch_tile"]
+
+
+def _chain(x_tile: jax.Array, cores: Sequence[jax.Array],
+           spec: tt_lib.TTSpec) -> jax.Array:
+    """The contraction chain on one resident tile (same math as tt_matvec)."""
+    bt = x_tile.shape[0]
+    n_suffix = spec.in_dim
+    m_prefix = 1
+    a = x_tile.reshape(bt, 1, spec.in_dim)
+    for k in range(spec.L):
+        r, m_k, n_k, r_next = spec.core_shapes[k]
+        n_suffix //= n_k
+        a = a.reshape(bt * m_prefix, r * n_k, n_suffix)
+        g = jnp.transpose(cores[k], (0, 2, 1, 3)).reshape(r * n_k, m_k * r_next)
+        a = jax.lax.dot_general(
+            a, g, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (B', N_>k, m·r')
+        a = a.reshape(bt * m_prefix, n_suffix, m_k, r_next)
+        a = jnp.transpose(a, (0, 2, 3, 1))
+        m_prefix *= m_k
+    return a.reshape(bt, spec.out_dim)
+
+
+def _kernel(spec: tt_lib.TTSpec, n_cores: int, *refs):
+    x_ref = refs[0]
+    core_refs = refs[1:1 + n_cores]
+    o_ref = refs[1 + n_cores]
+    cores = [c[...] for c in core_refs]
+    y = _chain(x_ref[...].astype(jnp.float32), cores, spec)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def default_batch_tile(spec: tt_lib.TTSpec, vmem_budget_bytes: int = 8 * 2**20) -> int:
+    """Largest MXU-aligned batch tile whose chain working set fits VMEM."""
+    # widest intermediate along the chain (elements per batch row)
+    widest = max(spec.in_dim, spec.out_dim)
+    m_prefix, n_suffix = 1, spec.in_dim
+    for k in range(spec.L):
+        r, m_k, n_k, r_next = spec.core_shapes[k]
+        n_suffix //= n_k
+        widest = max(widest, m_prefix * m_k * r_next * n_suffix)
+        m_prefix *= m_k
+    per_row = (spec.in_dim + spec.out_dim + 2 * widest) * 4
+    bt = max(8, int(vmem_budget_bytes // max(per_row, 1)))
+    # round down to a multiple of 128 (MXU lane alignment) when possible
+    if bt >= 128:
+        bt = (bt // 128) * 128
+    return min(bt, 4096)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "batch_tile", "interpret"))
+def tt_contract(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
+                batch_tile: int | None = None,
+                interpret: bool = False) -> jax.Array:
+    """y = x @ W(cores)^T, fused in VMEM.  x: (..., N) → (..., M)."""
+    batch_shape = x.shape[:-1]
+    B = int(np.prod(batch_shape)) if batch_shape else 1
+    xf = x.reshape(B, spec.in_dim)
+    bt = batch_tile or default_batch_tile(spec)
+    bt = min(bt, B)
+    # pad batch to a tile multiple
+    Bp = ((B + bt - 1) // bt) * bt
+    if Bp != B:
+        xf = jnp.pad(xf, ((0, Bp - B), (0, 0)))
+
+    grid = (Bp // bt,)
+    in_specs = [pl.BlockSpec((bt, spec.in_dim), lambda i: (i, 0))]
+    for shape in spec.core_shapes:
+        in_specs.append(pl.BlockSpec(shape, lambda i: (0, 0, 0, 0)))
+    out_spec = pl.BlockSpec((bt, spec.out_dim), lambda i: (i, 0))
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, spec, spec.L),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((Bp, spec.out_dim), x.dtype),
+        interpret=interpret,
+    )(xf, *cores)
+    return y[:B].reshape(*batch_shape, spec.out_dim)

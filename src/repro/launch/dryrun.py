@@ -1,0 +1,285 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against ShapeDtypeStruct inputs, prove the sharding is coherent
+and the memory fits, and extract the roofline terms.
+
+MUST set the host-device override before ANY other import (jax locks device
+count on first init)."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("XLA_FLAGS", ""))
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs                       # noqa: E402
+from repro.launch import mesh as mesh_lib       # noqa: E402
+from repro.models import api                    # noqa: E402
+from repro.optim import get_optimizer           # noqa: E402
+from repro.optim.optimizers import default_optimizer_for  # noqa: E402
+from repro.parallel import sharding as shd      # noqa: E402
+from repro.parallel import act as act_shd       # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes of every collective op in the (per-device)
+    optimized HLO.  Returns {op_kind: bytes}."""
+    out = {k: 0 for k in _COLLECTIVES}
+    # e.g.:  %ar = f32[128,64]{1,0} all-reduce(...)
+    #        %ag = (bf16[4,8]{...}, bf16[2]{...}) all-gather(...)
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    seen_done = set()
+    for m in pat.finditer(hlo_text):
+        types, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; only count -start
+        tail = hlo_text[m.end() - 1:m.end() + 8]
+        if "-done" in hlo_text[m.start():m.end()]:
+            continue
+        total = 0
+        for sm in shape_pat.finditer(types):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] += total
+    return out
+
+
+def make_train_step(cfg, optimizer):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, cfg, batch))(params)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, loss
+    return step
+
+
+def _lower_program(cfg, shape, mesh, optimizer_name, report):
+    """Build + lower the cell's program (train/prefill/decode)."""
+    aparams = api.abstract_params(cfg)
+    pshard = shd.param_shardings(mesh, aparams, report)
+    aparams_s = shd.attach(aparams, pshard)
+    ispecs = api.input_specs(cfg, shape)
+    with mesh, act_shd.activation_sharding(mesh):
+        if shape.kind == "train":
+            opt = get_optimizer(optimizer_name)
+            aopt = jax.eval_shape(opt.init, aparams)
+            batch_s = shd.attach(ispecs, shd.batch_shardings(mesh, ispecs, report))
+            step = make_train_step(cfg, opt)
+            return jax.jit(step).lower(aparams_s, aopt, batch_s)
+        if shape.kind == "prefill":
+            batch_s = shd.attach(ispecs, shd.batch_shardings(mesh, ispecs, report))
+            fn = lambda p, b: api.prefill_fn(p, cfg, b)
+            return jax.jit(fn).lower(aparams_s, batch_s)
+        cshard = shd.cache_shardings(mesh, ispecs["cache"],
+                                     shape.global_batch, report)
+        cache_s = shd.attach(ispecs["cache"], cshard)
+        tshard = shd.batch_shardings(mesh, {"tokens": ispecs["tokens"]}, report)
+        tok_s = shd.attach({"tokens": ispecs["tokens"]}, tshard)["tokens"]
+        fn = lambda p, c, t: api.decode_fn(p, cfg, c, t)
+        return jax.jit(fn).lower(aparams_s, cache_s, tok_s)
+
+
+def _extract_costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(sum(coll.values())),
+            "collectives": coll}
+
+
+def extrapolated_costs(cfg, shape, mesh, optimizer_name, report) -> dict:
+    """XLA costs a while-loop body exactly once (verified: a 10-trip scan of
+    a matmul reports 1 matmul of FLOPs), so scanned programs under-report.
+    Fix: lower depth-p and depth-2p variants with EVERY scan fully unrolled
+    (REPRO_COST_MODE=1) and extrapolate linearly in depth:
+
+        cost(L) = cost(p) + (L/p − 1) · [cost(2p) − cost(p)]
+
+    Exact because layer groups are identical by construction; the
+    depth-independent part (embedding, CE chunks, final norm) cancels."""
+    import dataclasses as _dc
+    from repro.models import transformer as _tf
+    p = _tf.period(cfg)
+    os.environ["REPRO_COST_MODE"] = "1"
+    try:
+        costs = {}
+        for mult in (1, 2):
+            c = _dc.replace(cfg, num_layers=p * mult)
+            low = _lower_program(c, shape, mesh, optimizer_name, report)
+            costs[mult] = _extract_costs(low.compile())
+        groups = cfg.num_layers // p
+        out = {}
+        for k in ("flops", "bytes", "coll_bytes"):
+            per_group = costs[2][k] - costs[1][k]
+            out[k] = costs[1][k] + (groups - 1) * per_group
+            out[f"{k}_depth1"] = costs[1][k]
+            out[f"{k}_per_group"] = per_group
+        out["collectives_depth2"] = costs[2]["collectives"]
+        return out
+    finally:
+        os.environ["REPRO_COST_MODE"] = "0"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               cfg=None, optimizer_name: str | None = None,
+               mesh=None) -> dict:
+    """Lower + compile one cell; return the roofline record."""
+    cfg = cfg or configs.get_config(arch)
+    shape = api.SHAPES[shape_name]
+    ok, why = api.supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh = mesh or mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    report = shd.ShardingReport(fallbacks=[])
+    opt_name = optimizer_name or default_optimizer_for(arch)
+
+    # 1) full-depth lowering+compile: proves sharding coherence + memory fit
+    t0 = time.time()
+    lowered = _lower_program(cfg, shape, mesh, opt_name, report)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    raw = _extract_costs(compiled)
+
+    # 2) depth-extrapolated true costs (scan bodies otherwise count once).
+    # The roofline table is single-pod (§Roofline); the multi-pod pass only
+    # proves the 'pod' axis shards, so skip its (expensive) cost lowerings.
+    if not multi_pod:
+        extra = extrapolated_costs(cfg, shape, mesh, opt_name, report)
+        flops = extra["flops"]
+        bytes_acc = extra["bytes"]
+        coll_bytes = extra["coll_bytes"]
+        coll = extra["collectives_depth2"]
+    else:
+        extra = {}
+        flops = raw["flops"]
+        bytes_acc = raw["bytes"]
+        coll_bytes = raw["coll_bytes"]
+        coll = raw["collectives"]
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    n_params = cfg.param_count_estimate()
+    n_active = cfg.active_param_count_estimate()
+    mult = 3 if shape.kind == "train" else 1  # fwd+bwd ≈ 3× fwd
+    model_flops = 2.0 * mult * n_active * tokens
+
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "chips": n_chips,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll,
+        "raw_scan_costs": raw,           # uncorrected full-depth numbers
+        "cost_extrapolation": {k: v for k, v in extra.items()
+                               if k != "collectives_depth2"},
+        "memory_analysis": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "params_total": n_params,
+        "params_active": n_active,
+        "model_flops_global": model_flops,
+        "sharding_fallbacks": report.fallbacks,
+        # roofline terms (seconds) — per-device HLO numbers vs per-chip peaks
+        "t_compute": flops / mesh_lib.PEAK_FLOPS_BF16,
+        "t_memory": bytes_acc / mesh_lib.HBM_BW,
+        "t_collective": coll_bytes / mesh_lib.ICI_BW_PER_LINK,
+        # useful-compute fraction: MODEL_FLOPS / total compiled FLOPs
+        # (< 1 ⇒ remat/attention/dispatch overhead; the roofline §Perf
+        # iterates on whatever term dominates)
+        "model_flops_ratio": (model_flops / (flops * n_chips)
+                              if flops else None),
+    }
+    terms = {"compute": record["t_compute"], "memory": record["t_memory"],
+             "collective": record["t_collective"]}
+    record["bottleneck"] = max(terms, key=terms.get)
+    return record
+
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = list(configs.ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(ALL_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{'multipod' if mp else 'singlepod'}_{arch}_{shape}"
+                path = out_dir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[lower] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001 — record the failure
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                path.write_text(json.dumps(rec, indent=2, default=str))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" bottleneck={rec['bottleneck']}"
+                             f" compile={rec['compile_s']}s")
+                print(f"[done] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

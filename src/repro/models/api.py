@@ -1,0 +1,135 @@
+"""Family-dispatched model API: every architecture exposes the same five
+entry points regardless of family, so the trainer / dry-run / serving layers
+are architecture-agnostic.
+
+    init_params(cfg, key)         → concrete params
+    abstract_params(cfg)          → ShapeDtypeStruct tree (no allocation)
+    loss_fn(params, cfg, batch)   → scalar LM loss          (train shapes)
+    prefill_fn(params, cfg, batch)→ (logits, cache)         (prefill shapes)
+    decode_fn(params, cfg, cache, tokens) → (logits, cache) (decode shapes)
+
+``input_specs(cfg, shape)`` builds the ShapeDtypeStruct stand-ins for every
+model input of an assigned (architecture × input-shape) cell; the dry-run
+lowers against exactly these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+#: archs with a sub-quadratic long-context mechanism run long_500k
+#: (DESIGN.md §4); pure full-attention archs skip it.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> tuple:
+    """(supported, reason)."""
+    if shape.name == "long_500k":
+        ok = (cfg.family in LONG_CONTEXT_FAMILIES) or bool(cfg.sliding_window)
+        return ok, ("" if ok else
+                    "pure full-attention arch: no sub-quadratic mechanism "
+                    "for a 524288-token decode (DESIGN.md §4)")
+    return True, ""
+
+
+# --------------------------------------------------------------- dispatchers
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    if cfg.family == "encdec":
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    if cfg.family == "encdec":
+        return encdec.abstract_params(cfg)
+    return transformer.abstract_params(cfg)
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if cfg.family == "encdec":
+        return encdec.loss_fn(params, cfg, batch["frames"], batch["tokens"],
+                              batch["labels"])
+    return transformer.loss_fn(params, cfg, batch["tokens"], batch["labels"])
+
+
+def forward(params: PyTree, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if cfg.family == "encdec":
+        return encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+    return transformer.forward(params, cfg, batch["tokens"])
+
+
+def prefill_fn(params: PyTree, cfg: ModelConfig, batch: dict) -> tuple:
+    if cfg.family == "encdec":
+        return encdec.prefill(params, cfg, batch["frames"], batch["tokens"])
+    return transformer.prefill(params, cfg, batch["tokens"])
+
+
+def decode_fn(params: PyTree, cfg: ModelConfig, cache: PyTree,
+              tokens: jax.Array) -> tuple:
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cfg, cache, tokens)
+    return transformer.decode_step(params, cfg, cache, tokens)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# -------------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), tok),
+            "labels": jax.ShapeDtypeStruct((B, S), tok),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one new token against a cache of length S
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+        "cache": abstract_cache(cfg, B, S),
+    }

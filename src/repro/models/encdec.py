@@ -1,0 +1,222 @@
+"""Encoder-decoder backbone (Whisper-style) — assignment: the audio frontend
+is a STUB; ``input_specs`` provides precomputed frame embeddings (B, F, d),
+standing in for the conv-downsampled log-mel features.
+
+Encoder: bidirectional self-attention + GELU MLP, sinusoidal positions.
+Decoder: causal self-attention + cross-attention + GELU MLP, learned
+positions.  Decode caches self-attn KV per step and precomputes the
+cross-attn K/V once from the encoder output.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import logits_fn, unembed_spec
+from repro.models.runtime_flags import scan_unroll
+
+MAX_DECODER_POS = 65536  # decoder learned-position table size
+
+
+def _sinusoid(length: int, dim: int) -> jax.Array:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / (10000.0 ** (2 * i / dim))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def init_enc_layer(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"norm1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(ks[1], cfg)}
+
+
+def init_dec_layer(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"norm1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(ks[0], cfg),
+            "norm_x": L.init_norm(cfg, cfg.d_model),
+            "xattn": L.init_attention(ks[1], cfg),
+            "norm2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(ks[2], cfg)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    params = {
+        "embed": L.init_embedding(ks[2], cfg),
+        "pos_dec": (0.01 * jax.random.normal(
+            ks[3], (MAX_DECODER_POS, cfg.d_model), jnp.float32)).astype(L._dt(cfg)),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_linear(ks[4], unembed_spec(cfg), L._dt(cfg))
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d) stub embeddings → encoder states (B, F, d)."""
+    B, F, d = frames.shape
+    x = frames + _sinusoid(F, d)[None].astype(frames.dtype)
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        h = L.attention_fwd(p["attn"], cfg, h, rope=None, causal=False)
+        x = x + h
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.mlp_fwd(p["mlp"], cfg, h)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"], unroll=scan_unroll())
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_layer(cfg: ModelConfig, p: dict, x: jax.Array,
+               enc: jax.Array) -> jax.Array:
+    h = L.apply_norm(cfg, p["norm1"], x)
+    h = L.attention_fwd(p["attn"], cfg, h, rope=None, causal=True)
+    x = x + h
+    h = L.apply_norm(cfg, p["norm_x"], x)
+    h = L.attention_fwd(p["xattn"], cfg, h, rope=None, causal=False,
+                        kv_override=(enc,))
+    x = x + h
+    h = L.apply_norm(cfg, p["norm2"], x)
+    return x + L.mlp_fwd(p["mlp"], cfg, h)
+
+
+def forward(params: dict, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array) -> jax.Array:
+    """→ logits (B, S, V)."""
+    enc = encode(params, cfg, frames)
+    B, Sq = tokens.shape
+    x = L.embedding_lookup(params["embed"], tokens, cfg)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], 0, Sq, 0)[None]
+
+    def body(x, p):
+        fn = functools.partial(_dec_layer, cfg)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn(p, x, enc), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=scan_unroll())
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return logits_fn(params, cfg, x)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = forward(params, cfg, frames, tokens).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# -------------------------------------------------------------------- decode
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    Ld = cfg.num_layers
+    F = cfg.encoder_frames
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((Ld, batch, cfg.num_kv_heads, max_len, hd), dt),
+        "v": jnp.zeros((Ld, batch, cfg.num_kv_heads, max_len, hd), dt),
+        "xk": jnp.zeros((Ld, batch, cfg.num_kv_heads, F, hd), dt),
+        "xv": jnp.zeros((Ld, batch, cfg.num_kv_heads, F, hd), dt),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array, max_len: int | None = None) -> tuple:
+    """Encode + run decoder over prompt tokens, returning populated caches."""
+    enc = encode(params, cfg, frames)
+    B, Sq = tokens.shape
+    max_len = max_len or Sq
+    hd = cfg.resolved_head_dim
+    specs = L.attention_specs(cfg)
+    x = L.embedding_lookup(params["embed"], tokens, cfg)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], 0, Sq, 0)[None]
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["norm1"], x)
+        k = L.apply_linear(p["attn"]["wk"], h, specs["wk"])
+        v = L.apply_linear(p["attn"]["wv"], h, specs["wv"])
+        k = k.reshape(B, Sq, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, Sq, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+        if max_len > Sq:
+            pad = ((0, 0), (0, 0), (0, max_len - Sq), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        xk = L.apply_linear(p["xattn"]["wk"], enc, specs["wk"])
+        xv = L.apply_linear(p["xattn"]["wv"], enc, specs["wv"])
+        F = enc.shape[1]
+        xk = xk.reshape(B, F, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+        xv = xv.reshape(B, F, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+        x2 = _dec_layer(cfg, p, x, enc)
+        return x2, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"], unroll=scan_unroll())
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = logits_fn(params, cfg, x)
+    caches = dict(caches)
+    caches["pos"] = jnp.asarray(Sq, jnp.int32)
+    return logits, caches
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array) -> tuple:
+    """One decoder token using self-attn KV cache + fixed cross-attn cache."""
+    B, Sq = tokens.shape
+    pos = cache["pos"]
+    hd = cfg.resolved_head_dim
+    specs = L.attention_specs(cfg)
+    x = L.embedding_lookup(params["embed"], tokens, cfg)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, Sq, 0)[None]
+
+    def body(x, inp):
+        p = inp["p"]
+        h = L.apply_norm(cfg, p["norm1"], x)
+        h, nk, nv = L.attention_decode(p["attn"], cfg, h, inp["k"], inp["v"],
+                                       pos, rope=None)
+        x = x + h
+        h = L.apply_norm(cfg, p["norm_x"], x)
+        # cross attention over the full (fixed) encoder cache
+        q = L.apply_linear(p["xattn"]["wq"], h, specs["wq"])
+        q = q.reshape(B, Sq, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+        F = inp["xk"].shape[2]
+        o = L.decode_attention(q, inp["xk"], inp["xv"],
+                               kv_len=jnp.asarray(F, jnp.int32))
+        o = o.transpose(0, 2, 1, 3).reshape(B, Sq, cfg.num_heads * hd)
+        x = x + L.apply_linear(p["xattn"]["wo"], o, specs["wo"])
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.mlp_fwd(p["mlp"], cfg, h)
+        return x, {"k": nk, "v": nv}
+
+    scan_in = {"p": params["dec_layers"], "k": cache["k"], "v": cache["v"],
+               "xk": cache["xk"], "xv": cache["xv"]}
+    x, new_kv = jax.lax.scan(body, x, scan_in, unroll=scan_unroll())
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(params, cfg, x)
+    new_cache = {"pos": pos + Sq, "k": new_kv["k"], "v": new_kv["v"],
+                 "xk": cache["xk"], "xv": cache["xv"]}
+    return logits, new_cache

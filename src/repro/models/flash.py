@@ -1,0 +1,226 @@
+"""Memory-optimal chunked attention with a hand-written backward
+(custom_vjp) — the XLA-HLO twin of a fused flash-attention kernel pair.
+
+Why this exists (EXPERIMENTS.md §Perf, hillclimb iterations 1–2):
+
+  1. Differentiating a streaming-softmax scan with JAX AD saves every
+     per-block (p, acc, m, l) as scan residuals — measured 403 GB/device of
+     temporaries for starcoder2 train_4k.  FlashAttention's backward
+     RECOMPUTES p per block from saved (q, k, v, out, lse): this custom_vjp.
+  2. A scan that carries the FULL (B,H,Sq,D) accumulator and
+     dynamic-update-slices into it is costed (and on some backends executed)
+     as a full-buffer copy per block.  Structure chosen here instead:
+     a static python loop over q-chunks; per q-chunk an inner ``lax.scan``
+     over its VALID kv-chunks (causal/SWA pruned statically, delivered as
+     scan ``xs`` — no dynamic slicing anywhere), carrying only the
+     (B,KH,G,qc,D) chunk accumulator.
+
+Backward runs the standard two-pass flash schedule: a dq pass (loop over
+q-chunks, scan over kv) and a dk/dv pass (loop over kv-chunks, scan over
+q), each recomputing p from (q, k, v, lse).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.runtime_flags import scan_unroll
+
+
+def _valid_kj(qi, nq, nk, qc, kc, offset, causal, window):
+    """kv-chunk indices that can contain unmasked entries for q-chunk qi."""
+    q_lo, q_hi = qi * qc + offset, qi * qc + offset + qc - 1
+    out = []
+    for kj in range(nk):
+        k_lo, k_hi = kj * kc, kj * kc + kc - 1
+        if causal and k_lo > q_hi:
+            continue
+        if window and k_hi <= q_lo - window:
+            continue
+        out.append(kj)
+    return out
+
+
+def _valid_qi(kj, nq, nk, qc, kc, offset, causal, window):
+    return [qi for qi in range(nq)
+            if kj in _valid_kj(qi, nq, nk, qc, kc, offset, causal, window)]
+
+
+def _mask(qi, kj, qc, kc, offset, causal, window, sk_valid=None):
+    q_pos = qi * qc + np.arange(qc)[:, None] + offset
+    k_pos = kj * kc + np.arange(kc)[None, :]
+    m = np.ones((qc, kc), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window:
+        m &= k_pos > q_pos - window
+    if sk_valid is not None:
+        m &= k_pos < sk_valid        # key padding (seq padded to a chunkable
+    return jnp.asarray(m)            # length; see layers.attention_fwd)
+
+
+def _gather_chunks(a, idxs, kc, axis):
+    """Stack chunks [a[..., kj*kc:(kj+1)*kc, :] for kj in idxs] along a new
+    leading axis using static slices only."""
+    parts = [jax.lax.slice_in_dim(a, kj * kc, (kj + 1) * kc, axis=axis)
+             for kj in idxs]
+    return jnp.stack(parts, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_hlo(q, k, v, causal=True, window=0,
+                        q_chunk=512, kv_chunk=1024, sk_valid=None,
+                        offset=None):
+    """q: (B,H,Sq,D); k,v: (B,KH,Sk,D) → (B,H,Sq,D).
+
+    ``offset``: true (unpadded) Sk−Sq timeline offset — REQUIRED when q and
+    k were padded by different amounts (see layers.attention_fwd)."""
+    out, _ = _fwd(q, k, v, causal, window, q_chunk, kv_chunk, sk_valid,
+                  offset)
+    return out
+
+
+def _geometry(q, k, q_chunk, kv_chunk, offset=None):
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    qc, kc = min(q_chunk, Sq), min(kv_chunk, Sk)
+    assert Sq % qc == 0 and Sk % kc == 0, (Sq, qc, Sk, kc)
+    off = (Sk - Sq) if offset is None else offset
+    return B, H, KH, Sq, Sk, D, H // KH, qc, kc, Sq // qc, Sk // kc, off
+
+
+def _fwd(q, k, v, causal, window, q_chunk, kv_chunk, sk_valid=None,
+         offset=None):
+    B, H, KH, Sq, Sk, D, G, qc, kc, nq, nk, offset = _geometry(
+        q, k, q_chunk, kv_chunk, offset)
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, Sq, D)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    outs, lses = [], []
+    for qi in range(nq):
+        qb = jax.lax.slice_in_dim(qg, qi * qc, (qi + 1) * qc, axis=3)
+        qb = qb.astype(jnp.float32)
+        idxs = _valid_kj(qi, nq, nk, qc, kc, offset, causal, window)
+        ks = _gather_chunks(kf, idxs, kc, axis=2)     # (n, B, KH, kc, D)
+        vs = _gather_chunks(vf, idxs, kc, axis=2)
+        masks = jnp.stack([_mask(qi, kj, qc, kc, offset, causal, window,
+                                 sk_valid) for kj in idxs], axis=0)
+
+        def step(carry, inp):
+            acc, m, l = carry
+            kb, vb, mask = inp
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qb, kb) * scale
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vb)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KH, G, qc, D), jnp.float32)
+        m0 = jnp.full((B, KH, G, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (ks, vs, masks),
+                                      unroll=scan_unroll())
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        outs.append(acc / l_safe[..., None])
+        lses.append(m + jnp.log(l_safe))
+
+    out = jnp.concatenate(outs, axis=3).reshape(B, H, Sq, D).astype(q.dtype)
+    lse = jnp.concatenate(lses, axis=3)               # (B,KH,G,Sq)
+    return out, lse
+
+
+def _fwd_rule(q, k, v, causal, window, q_chunk, kv_chunk, sk_valid=None,
+              offset=None):
+    out, lse = _fwd(q, k, v, causal, window, q_chunk, kv_chunk, sk_valid,
+                    offset)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(causal, window, q_chunk, kv_chunk, sk_valid, offset, res, dout):
+    q, k, v, out, lse = res
+    B, H, KH, Sq, Sk, D, G, qc, kc, nq, nk, offset = _geometry(
+        q, k, q_chunk, kv_chunk, offset)
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, Sq, D).astype(jnp.float32)
+    dog = dout.reshape(B, KH, G, Sq, D).astype(jnp.float32)
+    og = out.reshape(B, KH, G, Sq, D).astype(jnp.float32)
+    delta = jnp.sum(og * dog, axis=-1)                # (B,KH,G,Sq)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def qslice(a, qi, axis=3):
+        return jax.lax.slice_in_dim(a, qi * qc, (qi + 1) * qc, axis=axis)
+
+    # ---- pass 1: dq (loop q-chunks, scan kv-chunks) ----
+    dqs = []
+    for qi in range(nq):
+        qb, lse_b = qslice(qg, qi), qslice(lse, qi)
+        del_b, do_b = qslice(delta, qi), qslice(dog, qi)
+        idxs = _valid_kj(qi, nq, nk, qc, kc, offset, causal, window)
+        ks = _gather_chunks(kf, idxs, kc, axis=2)
+        vs = _gather_chunks(vf, idxs, kc, axis=2)
+        masks = jnp.stack([_mask(qi, kj, qc, kc, offset, causal, window,
+                                 sk_valid) for kj in idxs], 0)
+
+        def step(dq, inp):
+            kb, vb, mask = inp
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qb, kb) * scale
+            p = jnp.where(mask, jnp.exp(s - lse_b[..., None]), 0.0)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_b, vb)
+            ds = p * (dp - del_b[..., None]) * scale
+            return dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kb), None
+
+        dq0 = jnp.zeros((B, KH, G, qc, D), jnp.float32)
+        dq, _ = jax.lax.scan(step, dq0, (ks, vs, masks), unroll=scan_unroll())
+        dqs.append(dq)
+    dq = jnp.concatenate(dqs, axis=3).reshape(B, H, Sq, D).astype(q.dtype)
+
+    # ---- pass 2: dk/dv (loop kv-chunks, scan q-chunks) ----
+    dks, dvs = [], []
+    for kj in range(nk):
+        kb = jax.lax.slice_in_dim(kf, kj * kc, (kj + 1) * kc, axis=2)
+        vb = jax.lax.slice_in_dim(vf, kj * kc, (kj + 1) * kc, axis=2)
+        qis = _valid_qi(kj, nq, nk, qc, kc, offset, causal, window)
+        if not qis:
+            dks.append(jnp.zeros((B, KH, kc, D), k.dtype))
+            dvs.append(jnp.zeros((B, KH, kc, D), v.dtype))
+            continue
+        qs = jnp.stack([qslice(qg, qi) for qi in qis], 0)
+        lse_s = jnp.stack([qslice(lse, qi) for qi in qis], 0)
+        del_s = jnp.stack([qslice(delta, qi) for qi in qis], 0)
+        do_s = jnp.stack([qslice(dog, qi) for qi in qis], 0)
+        masks = jnp.stack([_mask(qi, kj, qc, kc, offset, causal, window,
+                                 sk_valid) for qi in qis], 0)
+
+        def step(carry, inp):
+            dk_a, dv_a = carry
+            qb, lse_b, del_b, do_b, mask = inp
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qb, kb) * scale
+            p = jnp.where(mask, jnp.exp(s - lse_b[..., None]), 0.0)
+            dv_a = dv_a + jnp.einsum("bkgqc,bkgqd->bkcd", p, do_b)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", do_b, vb)
+            ds = p * (dp - del_b[..., None]) * scale
+            dk_a = dk_a + jnp.einsum("bkgqc,bkgqd->bkcd", ds, qb)
+            return (dk_a, dv_a), None
+
+        z = jnp.zeros((B, KH, kc, D), jnp.float32)
+        (dk_c, dv_c), _ = jax.lax.scan(step, (z, z),
+                                       (qs, lse_s, del_s, do_s, masks),
+                                       unroll=scan_unroll())
+        dks.append(dk_c.astype(k.dtype))
+        dvs.append(dv_c.astype(v.dtype))
+    dk = jnp.concatenate(dks, axis=2)
+    dv = jnp.concatenate(dvs, axis=2)
+    return dq, dk, dv
+
+
+flash_attention_hlo.defvjp(_fwd_rule, _bwd_rule)

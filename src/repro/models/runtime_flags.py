@@ -1,0 +1,21 @@
+"""Process-wide lowering flags.
+
+``REPRO_COST_MODE=1`` fully unrolls every inner ``lax.scan`` so that
+``compiled.cost_analysis()`` counts each iteration (XLA costs a while-loop
+body exactly once — verified in EXPERIMENTS.md §Dry-run).  Used only by the
+cost-extraction lowering in ``launch/dryrun.py``; real programs keep scans
+rolled for O(1)-in-depth HLO.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def cost_mode() -> bool:
+    return os.environ.get("REPRO_COST_MODE", "0") == "1"
+
+
+def scan_unroll():
+    """unroll= argument for inner scans: full unroll in cost mode."""
+    return True if cost_mode() else 1

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The SSD layer computes, per head h with scalar decay A_h < 0:
+
+    s_t = exp(dt_t·A) s_{t-1} + dt_t · B_t x_tᵀ          (state: N × P)
+    y_t = C_tᵀ s_t + D x_t
+
+Training/prefill uses the chunked dual form: within a chunk of Q tokens the
+recurrence is a masked (attention-like) quadratic contraction; across chunks
+a sequential ``lax.scan`` carries the (H, N, P) state.  Decode is an O(1)
+state update — this is why the SSM/hybrid architectures are the ones that
+run the ``long_500k`` shape (DESIGN.md §4).
+
+Layout notes: heads (H) are the TP-shardable axis; the chunk axis stays
+sequential (scan).  The conv1d mixing (width ``ssm_conv``) is depthwise and
+causal, cached during decode.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dt, rmsnorm
+from repro.models.runtime_flags import scan_unroll
+from repro.parallel import act
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    dt = _dt(cfg)
+    conv_ch = di + 2 * G * N
+    proj_out = 2 * di + 2 * G * N + H   # z, x, B, C, dt
+    ks = jax.random.split(key, 5)
+    std = math.sqrt(2.0 / (d + proj_out))
+    return {
+        "in_proj": (std * jax.random.normal(ks[0], (d, proj_out), jnp.float32)).astype(dt),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H)).astype(jnp.float32)),
+        "norm_scale": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": (math.sqrt(2.0 / (di + d))
+                     * jax.random.normal(ks[2], (di, d), jnp.float32)).astype(dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time.  x: (B, S, Ch); w: (W, Ch)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # sum over taps via shifted slices (static unroll over W ≤ 4)
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise segment sums: out[..., i, j] = Σ_{j<k<=i} x_k."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: jax.Array | None = None) -> tuple:
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes (already softplus'ed)
+    A:  (H,)           negative decay rates
+    Bm: (B, S, G, N);  Cm: (B, S, G, N)   input/output projections (G groups)
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    S_orig = S
+    if S % chunk != 0:
+        # pad the tail with dt=0 steps: decay exp(0)=1 and dt·Bx=0, so the
+        # final state is untouched; padded outputs are sliced off below
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+    f32 = jnp.float32
+
+    xc = x.reshape(B, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(B, nc, chunk, G, N).astype(f32)
+    Cc = Cm.reshape(B, nc, chunk, G, N).astype(f32)
+    Bh = jnp.repeat(Bc, rep, axis=3)   # (B, nc, Q, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]            # (B, nc, Q, H), ≤ 0
+    dA_cs = jnp.cumsum(dA, axis=2)               # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic/dual form) ----
+    Lmat = jnp.exp(_segsum(jnp.swapaxes(dA, 2, 3)))        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)      # (B,nc,H,Q,Q)
+    scores = scores * Lmat * jnp.swapaxes(dtc, 2, 3)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp",
+                        Bh, decay_to_end * dtc, xc)        # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (B,nc,H)
+
+    # ---- inter-chunk recurrence (sequential scan over chunks) ----
+    s0 = (jnp.zeros((B, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(s, inp):
+        st, dec = inp                                      # (B,H,N,P), (B,H)
+        s_in = s
+        s = s * dec[:, :, None, None] + st
+        return s, s_in
+
+    states_t = jnp.moveaxis(states, 1, 0)                  # (nc, B, H, N, P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)              # (nc, B, H)
+    final, s_prev = jax.lax.scan(step, s0, (states_t, decay_t),
+                                 unroll=scan_unroll())
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                    # (B,nc,H,N,P) state entering chunk
+
+    # ---- inter-chunk output ----
+    in_decay = jnp.exp(dA_cs)                              # decay from chunk start
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", Ch, in_decay, s_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)[:, :S_orig]
+    return y, final
+
+
+def ssm_fwd(params: dict, cfg: ModelConfig, u: jax.Array,
+            init_state: jax.Array | None = None,
+            conv_init: jax.Array | None = None,
+            return_state: bool = False):
+    """Full-sequence Mamba2 mixer.  u: (B, S, d) → (B, S, d)."""
+    B, S, d = u.shape
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    proj = u @ params["in_proj"]                           # (B,S,2di+2GN+H)
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+    if conv_init is not None:
+        xbc_ext = jnp.concatenate([conv_init.astype(xbc.dtype), xbc], axis=1)
+        xbc_conv = _causal_conv(xbc_ext, params["conv_w"], params["conv_b"])[:, -S:]
+    else:
+        xbc_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(u.dtype)
+    x, Bm, Cm = jnp.split(xbc_conv, [di, di + G * N], axis=-1)
+    x = act.constrain(x.reshape(B, S, H, P), ("dp", None, "tp", None))
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, min(cfg.ssm_chunk, S), init_state)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y.astype(u.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                params["norm_scale"], cfg.norm_eps)
+    y = act.constrain(y, ("dp", None, "tp"))
+    out = act.constrain(y @ params["out_proj"], ("dp", None, None))
+    if return_state:
+        conv_tail = xbc[:, -(cfg.ssm_conv - 1):] if S >= cfg.ssm_conv - 1 else \
+            jnp.pad(xbc, ((0, 0), (cfg.ssm_conv - 1 - S, 0), (0, 0)))
+        return out, state, conv_tail
+    return out
+
+
+def ssm_decode(params: dict, cfg: ModelConfig, u: jax.Array,
+               state: jax.Array, conv_buf: jax.Array) -> tuple:
+    """One-token decode.  u: (B, 1, d); state: (B,H,N,P);
+    conv_buf: (B, W−1, conv_ch) rolling window of pre-conv activations."""
+    B, S, d = u.shape
+    assert S == 1
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    proj = u @ params["in_proj"]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+    window = jnp.concatenate([conv_buf.astype(xbc.dtype), xbc], axis=1)  # (B,W,ch)
+    w = params["conv_w"]
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xbc_c = jax.nn.silu(conv).astype(u.dtype)[:, None]     # (B,1,ch)
+    x, Bm, Cm = jnp.split(xbc_c, [di, di + G * N], axis=-1)
+    x = x.reshape(B, H, P).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * A[None])                            # (B,H)
+    state = state.astype(jnp.float32) * dec[:, :, None, None] \
+        + jnp.einsum("bhn,bh,bhp->bhnp", Bm, dt, x)
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, state) + params["D"][None, :, None] * x
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(y.astype(u.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_conv = jnp.concatenate([conv_buf[:, 1:], xbc.astype(conv_buf.dtype)], axis=1)
+    return out, state, new_conv

@@ -1,0 +1,339 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid families.
+
+Layers are stacked and ``lax.scan``ned so compiled HLO is O(1) in depth.
+Heterogeneous stacks (Jamba: 1 attention per 8 layers, MoE every 2nd) scan
+over *periods*: the layer pattern of length ``p`` is unrolled inside the
+scan body and parameters are stacked per pattern position, shape
+``(L/p, ...)``.
+
+Three entry points per config:
+  * ``forward``      — full-sequence logits (training / prefill),
+  * ``prefill``      — logits + populated decode caches,
+  * ``decode_step``  — one token with caches (KV for attention layers,
+                       (state, conv) for SSM layers — O(1) for SSM, which is
+                       what makes ``long_500k`` runnable for mamba2/jamba).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.runtime_flags import scan_unroll
+from repro.parallel import act
+
+PyTree = Any
+
+
+def period(cfg: ModelConfig) -> int:
+    """Length of the repeating layer pattern."""
+    if cfg.family == "hybrid":
+        p = 1
+        if cfg.attn_every:
+            p = max(p, cfg.attn_every)
+        if cfg.moe_every:
+            p = int(np.lcm(p, cfg.moe_every))
+        return p
+    return 1
+
+
+# ---------------------------------------------------------------------- init
+
+def init_layer(key: jax.Array, cfg: ModelConfig, pos: int) -> dict:
+    """One layer at pattern position ``pos``."""
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": L.init_norm(cfg, cfg.d_model)}
+    if cfg.layer_kind(pos) == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = S.init_ssm(ks[0], cfg)
+    kind = cfg.ffn_kind(pos)
+    if kind != "none":
+        p["norm2"] = L.init_norm(cfg, cfg.d_model)
+    if kind == "moe":
+        p["moe"] = L.init_moe(ks[1], cfg)
+    elif kind == "dense":
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    p = period(cfg)
+    n_groups = cfg.num_layers // p
+    assert n_groups * p == cfg.num_layers, (cfg.num_layers, p)
+    keys = jax.random.split(key, 3 + p)
+    params: dict = {
+        "embed": L.init_embedding(keys[0], cfg),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec = unembed_spec(cfg)
+        params["unembed"] = L.init_linear(keys[1], spec, L._dt(cfg))
+    for j in range(p):
+        gkeys = jax.random.split(keys[3 + j], n_groups)
+        params[f"layers_{j}"] = jax.vmap(
+            lambda k: init_layer(k, cfg, j))(gkeys)
+    return params
+
+
+def unembed_spec(cfg: ModelConfig) -> L.LinearSpec:
+    return L.LinearSpec(in_dim=cfg.d_model, out_dim=cfg.vocab_size,
+                        tt=(cfg.tt_mode == "all"),
+                        tt_rank=cfg.tt_rank, tt_L=cfg.tt_L)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------- forward
+
+def _layer_fwd(cfg: ModelConfig, pos: int, p: dict, x: jax.Array,
+               rope: tuple | None) -> jax.Array:
+    # Megatron-SP: residual stream sharded (batch→dp, seq→model); the TP
+    # blocks all-gather at entry and reduce-scatter at exit, so saved
+    # per-layer residuals are 1/tp the size (hillclimb iter 3)
+    x = act.constrain(x, ("dp", "sq", None))
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if cfg.layer_kind(pos) == "attn":
+        window = cfg.sliding_window if cfg.uses_swa(pos) else 0
+        h = L.attention_fwd(p["attn"], cfg, h, rope, causal=True, window=window)
+    else:
+        h = S.ssm_fwd(p["ssm"], cfg, h)
+    x = act.constrain(x + h, ("dp", "sq", None))
+    kind = cfg.ffn_kind(pos)
+    if kind == "none":
+        return x
+    h = L.apply_norm(cfg, p["norm2"], x)
+    if kind == "moe":
+        h = L.moe_fwd(p["moe"], cfg, h)
+    else:
+        h = L.mlp_fwd(p["mlp"], cfg, h)
+    return act.constrain(x + h, ("dp", "sq", None))
+
+
+def backbone(params: dict, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array) -> jax.Array:
+    """Run the scanned layer stack on embedded inputs x: (B, S, d)."""
+    rope = (L.rope_freqs(cfg, positions) if cfg.rope_type != "none" else None)
+    p = period(cfg)
+
+    def group_fwd(x, group_params):
+        for j in range(p):
+            body = functools.partial(_layer_fwd, cfg, j)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x = body(group_params[f"layers_{j}"], x, rope)
+        return x, None
+
+    stack = {f"layers_{j}": params[f"layers_{j}"] for j in range(p)}
+    x, _ = jax.lax.scan(group_fwd, x, stack, unroll=scan_unroll())
+    return x
+
+
+def logits_fn(params: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        if "table" in params["embed"]:
+            return h @ params["embed"]["table"].T
+        # TT-tied: unembed = (tt matvec with the embedding cores)
+        from repro.core import tt as tt_lib
+        spec = tt_lib.auto_factorize(cfg.vocab_size, cfg.d_model,
+                                     L=cfg.tt_L, max_rank=cfg.tt_rank)
+        from repro.kernels import ops as kops
+        return kops.tt_linear(h, params["embed"]["cores"], spec)
+    return L.apply_linear(params["unembed"], h, unembed_spec(cfg))
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) → logits (B, S, V)."""
+    B, Sq = tokens.shape
+    x = L.embedding_lookup(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if cfg.rope_type == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+    h = backbone(params, cfg, x, positions)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return logits_fn(params, cfg, h)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, ce_chunk: int = 1024) -> jax.Array:
+    """Causal-LM cross entropy with seq-chunked logits (the (B,S,V) tensor is
+    never materialized — V is huge for the qwen vocabularies)."""
+    B, Sq = tokens.shape
+    x = act.constrain(L.embedding_lookup(params["embed"], tokens, cfg),
+                      ("dp", None, None))
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if cfg.rope_type == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+    h = backbone(params, cfg, x, positions)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+
+    ck = min(ce_chunk, Sq)
+    assert Sq % ck == 0
+    nchunks = Sq // ck
+    hc = h.reshape(B, nchunks, ck, cfg.d_model).swapaxes(0, 1)
+    lc = labels.reshape(B, nchunks, ck).swapaxes(0, 1)
+
+    def ce_chunk_fn(carry, inp):
+        hj, lj = inp
+        hj = act.constrain(hj, ("dp", None, None))
+        logits = logits_fn(params, cfg, hj).astype(jnp.float32)
+        logits = act.constrain(logits, ("dp", None, "tp"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lj[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    body = ce_chunk_fn
+    if cfg.remat:
+        body = jax.checkpoint(ce_chunk_fn)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc),
+                            unroll=scan_unroll())
+    return total / (B * Sq)
+
+
+# -------------------------------------------------------------------- decode
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode caches stacked per pattern position: KV for attention layers,
+    (state, conv) for SSM layers."""
+    p = period(cfg)
+    n_groups = cfg.num_layers // p
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    for j in range(p):
+        if cfg.layer_kind(j) == "attn":
+            shape = (n_groups, batch, cfg.num_kv_heads, max_len, hd)
+            cache[f"k_{j}"] = jnp.zeros(shape, dt)
+            cache[f"v_{j}"] = jnp.zeros(shape, dt)
+        else:
+            cache[f"state_{j}"] = jnp.zeros(
+                (n_groups, batch, cfg.ssm_heads, cfg.ssm_state,
+                 cfg.ssm_head_dim), jnp.float32)
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            cache[f"conv_{j}"] = jnp.zeros(
+                (n_groups, batch, cfg.ssm_conv - 1, conv_ch), dt)
+    return cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array) -> tuple:
+    """One decode step.  tokens: (B, 1) → (logits (B, 1, V), new cache)."""
+    B, Sq = tokens.shape
+    pos = cache["pos"]
+    x = L.embedding_lookup(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(pos[None, None], (B, Sq))
+    if cfg.rope_type == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+    rope = (L.rope_freqs(cfg, positions) if cfg.rope_type != "none" else None)
+    p = period(cfg)
+
+    def group_step(x, inp):
+        new_slices = {}
+        for j in range(p):
+            lp = inp[f"layers_{j}"]
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            if cfg.layer_kind(j) == "attn":
+                window = cfg.sliding_window if cfg.uses_swa(j) else 0
+                h, nk, nv = L.attention_decode(
+                    lp["attn"], cfg, h, inp[f"k_{j}"], inp[f"v_{j}"], pos,
+                    rope, window=window)
+                new_slices[f"k_{j}"], new_slices[f"v_{j}"] = nk, nv
+            else:
+                h, st, cv = S.ssm_decode(lp["ssm"], cfg, h,
+                                         inp[f"state_{j}"], inp[f"conv_{j}"])
+                new_slices[f"state_{j}"], new_slices[f"conv_{j}"] = st, cv
+            x = x + h
+            kind = cfg.ffn_kind(j)
+            if kind != "none":
+                h = L.apply_norm(cfg, lp["norm2"], x)
+                if kind == "moe":
+                    h = L.moe_fwd(lp["moe"], cfg, h)
+                else:
+                    h = L.mlp_fwd(lp["mlp"], cfg, h)
+                x = x + h
+        return x, new_slices
+
+    scan_in = {f"layers_{j}": params[f"layers_{j}"] for j in range(p)}
+    for key in cache:
+        if key != "pos":
+            scan_in[key] = cache[key]
+    x, new_cache_slices = jax.lax.scan(group_step, x, scan_in,
+                                       unroll=scan_unroll())
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(params, cfg, x)
+    new_cache = dict(new_cache_slices)
+    new_cache["pos"] = pos + Sq
+    return logits, new_cache
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            max_len: int | None = None) -> tuple:
+    """Full-sequence prefill returning last-token logits + populated caches.
+
+    Attention KV caches are filled with the computed K/V; SSM layers return
+    their final state.  (For the dry-run's ``prefill_32k`` shape this is the
+    lowered program.)
+    """
+    B, Sq = tokens.shape
+    max_len = max_len or Sq
+    x = L.embedding_lookup(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if cfg.rope_type == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+    rope = (L.rope_freqs(cfg, positions) if cfg.rope_type != "none" else None)
+    p = period(cfg)
+    hd = cfg.resolved_head_dim
+    specs = L.attention_specs(cfg)
+
+    def group_fwd(x, group_params):
+        new_slices = {}
+        for j in range(p):
+            lp = group_params[f"layers_{j}"]
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            if cfg.layer_kind(j) == "attn":
+                # recompute K/V for the cache (forward also computes them —
+                # XLA CSEs the duplicate projections)
+                k = L.apply_linear(lp["attn"]["wk"], h, specs["wk"])
+                v = L.apply_linear(lp["attn"]["wv"], h, specs["wv"])
+                k = k.reshape(B, Sq, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+                v = v.reshape(B, Sq, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+                if rope is not None and cfg.rope_type != "none":
+                    k = L.apply_rope(k, *rope)
+                window = cfg.sliding_window if cfg.uses_swa(j) else 0
+                h = L.attention_fwd(lp["attn"], cfg, h, rope, causal=True,
+                                    window=window)
+                if max_len > Sq:
+                    pad = ((0, 0), (0, 0), (0, max_len - Sq), (0, 0))
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                new_slices[f"k_{j}"], new_slices[f"v_{j}"] = k, v
+            else:
+                h, st, cv = S.ssm_fwd(lp["ssm"], cfg, h, return_state=True)
+                new_slices[f"state_{j}"], new_slices[f"conv_{j}"] = st, cv
+            x = x + h
+            kind = cfg.ffn_kind(j)
+            if kind != "none":
+                h = L.apply_norm(cfg, lp["norm2"], x)
+                if kind == "moe":
+                    h = L.moe_fwd(lp["moe"], cfg, h)
+                else:
+                    h = L.mlp_fwd(lp["mlp"], cfg, h)
+                x = x + h
+        return x, new_slices
+
+    stack = {f"layers_{j}": params[f"layers_{j}"] for j in range(p)}
+    x, cache = jax.lax.scan(group_fwd, x, stack, unroll=scan_unroll())
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = logits_fn(params, cfg, x)
+    cache = dict(cache)
+    cache["pos"] = jnp.asarray(Sq, jnp.int32)
+    return logits, cache

@@ -1,0 +1,148 @@
+"""First-order optimizers (pure pytree functions, no external deps).
+
+``adamw``   — fp32 m/v; the default for ≤10B-param configs.
+``adafactor`` — factored second moments for ≥2-D params (rows/cols), O(n+m)
+              state instead of O(nm); selected for dbrx-132b / jamba-398b
+              where AdamW's fp32 m+v would not fit 256 chips (DESIGN.md §5).
+``sgd``     — momentum SGD (baseline / tests).
+
+State trees mirror the param tree leaf-for-leaf, so parameter shardings
+transfer to optimizer state verbatim (ZeRO-1-equivalent comes free from the
+FSDP param sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple]  # (grads, state, params)
+    name: str = "opt"
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+# ---------------------------------------------------------------------- AdamW
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros,
+                "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        b1c = 1.0 - b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - b2 ** c.astype(jnp.float32)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        upd = _tmap(
+            lambda m_, v_, p: (-lr * ((m_ / b1c) / (jnp.sqrt(v_ / b2c) + eps)
+                                      + weight_decay * p.astype(jnp.float32))
+                               ).astype(p.dtype),
+            m, v, params)
+        new_params = _tmap(lambda p, u: p + u, params, upd)
+        return new_params, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ------------------------------------------------------------------ Adafactor
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no momentum."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": _tmap(leaf, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-decay)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r_factor = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                c_factor = jax.lax.rsqrt(vc + eps)
+                u = g * r_factor[..., None] * c_factor[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p - lr * u.astype(jnp.float32)).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_v = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"v": new_v, "count": c}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+# ----------------------------------------------------------------------- SGD
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        m = _tmap(lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                  state["m"], grads)
+        new_params = _tmap(lambda p, m_: (p.astype(jnp.float32)
+                                          - lr * m_).astype(p.dtype), params, m)
+        return new_params, {"m": m}
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def get_optimizer(name: str, lr: float | None = None) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr or 3e-4)
+    if name == "adafactor":
+        return adafactor(lr=lr or 1e-3)
+    if name == "sgd":
+        return sgd(lr=lr or 1e-2)
+    raise KeyError(name)
+
+
+def default_optimizer_for(arch_name: str) -> str:
+    """dbrx/jamba: AdamW fp32 m+v per 256 chips would need ~12 bytes/param
+    (>15 GB/chip for 398B) — use adafactor (DESIGN.md §5)."""
+    if "dbrx" in arch_name or "jamba" in arch_name:
+        return "adafactor"
+    return "adamw"

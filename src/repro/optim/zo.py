@@ -1,0 +1,40 @@
+"""BP-free trainer step for arbitrary models — the paper's on-chip training
+loop promoted to a framework feature.
+
+Any config can be trained with ZO-signSGD (``--optimizer zo-signsgd``): the
+loss is evaluated (N+1) times per step with phase/weight perturbations
+regenerated from the step key.  With ``axis_name`` set (inside shard_map or
+pmap) the distributed-ZO protocol from ``repro.core.zoo`` kicks in: each
+worker evaluates a slice of the N perturbations and the ONLY cross-worker
+traffic is the psum of an N-vector of scalar losses.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import zoo
+
+PyTree = Any
+
+
+def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],
+                            params: PyTree, key: jax.Array, lr: float,
+                            num_samples: int = 10, mu: float = 1e-2,
+                            axis_name: str | None = None,
+                            worker_index: int = 0,
+                            num_workers: int = 1) -> tuple:
+    """One BP-free update. Returns (new_params, loss)."""
+    cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu)
+    shard = None
+    if num_workers > 1:
+        per = -(-num_samples // num_workers)
+        shard = (worker_index * per, min(num_samples, (worker_index + 1) * per))
+    grad, base = zoo.spsa_gradient(loss_fn, params, key, cfg,
+                                   axis_name=axis_name, index_shard=shard)
+    new_params = jax.tree.map(
+        lambda p, g: p - lr * jnp.sign(g).astype(p.dtype), params, grad)
+    return new_params, base

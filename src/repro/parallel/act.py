@@ -1,0 +1,115 @@
+"""Activation sharding constraints.
+
+GSPMD propagates weight shardings into activations, but for awkward shapes
+it can pick pathological layouts — measured example (EXPERIMENTS.md §Perf,
+starcoder2 train_4k): 36 q-heads do not divide the 16-way model axis, so the
+partitioner sharded the CONTRACTION dim (head_dim) of q·kᵀ and all-reduced
+full (B,H,qc,kc) score tensors — 580 GB of all-reduce per layer.
+
+``constrain`` applies a logical-axis sharding constraint with the same
+divisibility fallback as the weight rules; models call it at layer
+boundaries.  Two attention schemes are chosen per-config:
+
+  * heads % tp == 0  → Megatron: q-heads on the model axis; KV heads on the
+    model axis when they divide too, else replicated (GQA all-gather of the
+    small KV projections);
+  * otherwise        → batch×model attention: the batch axis is sharded over
+    (pod, data, model) jointly for the attention block, with all-to-all
+    reshards at entry/exit.  No partial-sum score reductions either way.
+
+No ambient mesh (unit tests, single device) ⇒ every call is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel.sharding import logical_env, resolve
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    prev = getattr(_CTX, "mesh", None)
+    _CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _CTX.mesh = prev
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_CTX, "mesh", None)
+
+
+def tp_size() -> int:
+    mesh = current_mesh()
+    return mesh.shape["model"] if mesh is not None else 1
+
+
+def constrain(x: jax.Array, logical: tuple) -> jax.Array:
+    """Apply with_sharding_constraint per logical axes; no-op without mesh.
+
+    logical entries: 'dp' | 'tp' | 'fsdp' | 'ep' | 'sp' | 'dpm' | None.
+    'dpm' = batch over (pod, data, model) jointly (attention fallback).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    env = dict(logical_env(mesh))
+    env["dpm"] = env["dp"] + ("model",)
+    env["sq"] = ("model",)   # Megatron-SP: sequence dim of the residual stream
+    # resolve() with the extended env: inline the same divisibility logic
+    spec = []
+    for d, lg in zip(x.shape, logical):
+        axes = env.get(lg, ())
+        keep, size = [], 1
+        for ax in axes:
+            if d % (size * mesh.shape[ax]) == 0:
+                keep.append(ax)
+                size *= mesh.shape[ax]
+        spec.append(None if not keep
+                    else (keep[0] if len(keep) == 1 else tuple(keep)))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def attention_scheme(num_heads: int) -> str:
+    """'megatron' when q-heads divide the model axis, else 'batch'."""
+    t = tp_size()
+    if t == 1:
+        return "none"
+    return "megatron" if num_heads % t == 0 else "batch"
+
+
+def constrain_qkv(q, k, v, num_heads: int, num_kv_heads: int):
+    """q,k,v: (B, H|KH, S, D) — apply the per-scheme constraint."""
+    scheme = attention_scheme(num_heads)
+    if scheme == "none":
+        return q, k, v
+    if scheme == "megatron":
+        q = constrain(q, ("dp", "tp", None, None))
+        kv_l = "tp" if num_kv_heads % tp_size() == 0 else None
+        k = constrain(k, ("dp", kv_l, None, None))
+        v = constrain(v, ("dp", kv_l, None, None))
+    else:  # batch×model attention
+        q = constrain(q, ("dpm", None, None, None))
+        k = constrain(k, ("dpm", None, None, None))
+        v = constrain(v, ("dpm", None, None, None))
+    return q, k, v
+
+
+def constrain_attn_out(o, num_heads: int):
+    scheme = attention_scheme(num_heads)
+    if scheme == "megatron":
+        return constrain(o, ("dp", "tp", None, None))
+    if scheme == "batch":
+        return constrain(o, ("dpm", None, None, None))
+    return o

@@ -1,0 +1,204 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Physical mesh axes (launch/mesh.py): ``("data", "model")`` single-pod,
+``("pod", "data", "model")`` multi-pod.  Logical axes used by the rules:
+
+    dp    → ("pod", "data")   batch / expert-dispatch groups
+    fsdp  → "data"            weight sharding along a non-TP dim (ZeRO-3-ish)
+    ep    → "data"            MoE expert dim (expert parallelism)
+    tp    → "model"           heads / ffn / vocab (tensor parallelism)
+    sp    → "data"            sequence axis of long-context decode caches
+
+Every rule is *best effort*: if the dim is not divisible by the mesh axis
+(e.g. 8 KV heads on a 16-way model axis) that axis is dropped (replicated)
+and the fallback is recorded — the dry-run report lists all fallbacks so
+sharding gaps are visible rather than silent.
+
+Rules are path-pattern based over the param tree, so any new layer gets
+sensible sharding by matching its leaf names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def logical_env(mesh: Mesh) -> dict:
+    multi = "pod" in mesh.axis_names
+    return {
+        "dp": ("pod", "data") if multi else ("data",),
+        "fsdp": ("data",),
+        "ep": ("data",),
+        "tp": ("model",),
+        "sp": ("data",),
+        None: (),
+    }
+
+
+@dataclasses.dataclass
+class ShardingReport:
+    fallbacks: list
+
+
+def resolve(mesh: Mesh, shape: tuple, logical: tuple,
+            report: ShardingReport | None = None,
+            name: str = "?") -> NamedSharding:
+    """logical: per-dim logical axis name (or None). Returns NamedSharding
+    with non-divisible axes dropped."""
+    env = logical_env(mesh)
+    spec = []
+    for d, lg in zip(shape, logical):
+        axes = env[lg]
+        keep = []
+        size = 1
+        for ax in axes:
+            ax_size = mesh.shape[ax]
+            if d % (size * ax_size) == 0:
+                keep.append(ax)
+                size *= ax_size
+        if axes and len(keep) < len(axes) and report is not None:
+            report.fallbacks.append(
+                f"{name}: dim {d} not divisible by {axes} "
+                f"(kept {tuple(keep)})")
+        if not keep:
+            spec.append(None)
+        elif len(keep) == 1:
+            spec.append(keep[0])
+        else:
+            spec.append(tuple(keep))
+    return NamedSharding(mesh, P(*spec))
+
+
+# ------------------------------------------------------------- param rules
+
+# (path regex, logical axes for the *trailing* dims; a leading stacked-layer
+# dim is auto-detected and mapped to None)
+PARAM_RULES = [
+    # embeddings
+    (r"embed/table$", ("tp", "fsdp")),
+    (r"embed/cores", None),                       # TT cores: tiny → replicate
+    (r"unembed/w$", ("fsdp", "tp")),
+    (r"unembed/cores", None),
+    (r"pos_dec$", (None, "fsdp")),
+    # attention
+    (r"(attn|xattn)/wq/w$", ("fsdp", "tp")),
+    (r"(attn|xattn)/wk/w$", ("fsdp", "tp")),
+    (r"(attn|xattn)/wv/w$", ("fsdp", "tp")),
+    (r"(attn|xattn)/wo/w$", ("tp", "fsdp")),
+    (r"(attn|xattn)/w[qkv]/b$", ("tp",)),
+    (r"(attn|xattn)/w[qkvo]/cores", None),
+    # dense mlp (incl. shared experts)
+    (r"(mlp|shared)/w_(gate|up)/w$", ("fsdp", "tp")),
+    (r"(mlp|shared)/w_down/w$", ("tp", "fsdp")),
+    (r"(mlp|shared)/w_(gate|up|down)/b$", ("tp",)),
+    (r"(mlp|shared)/w_.*/cores", None),
+    # MoE experts: E over ep, ff over tp
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("ep", None, "tp")),
+    (r"moe/w_down$", ("ep", "tp", None)),
+    (r"moe/shared_gate$", (None, None)),
+    # SSM
+    (r"ssm/in_proj$", ("fsdp", "tp")),
+    (r"ssm/out_proj$", ("tp", "fsdp")),
+    (r"ssm/conv_w$", (None, "tp")),
+    (r"ssm/conv_b$", ("tp",)),
+    (r"ssm/(A_log|D|dt_bias)$", (None,)),
+    (r"ssm/norm_scale$", ("tp",)),
+    # norms / everything small
+    (r"(norm|scale|bias)", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(mesh: Mesh, abstract_params: PyTree,
+                    report: ShardingReport | None = None) -> PyTree:
+    """NamedSharding tree matching the (abstract) param tree."""
+
+    def leaf(path, x):
+        name = _path_str(path)
+        shape = x.shape
+        for pat, logical in PARAM_RULES:
+            if re.search(pat, name):
+                if logical is None:
+                    return NamedSharding(mesh, P(*([None] * len(shape))))
+                # auto-pad a leading stacked-layers dim with None
+                pad = len(shape) - len(logical)
+                full = (None,) * pad + tuple(logical)
+                return resolve(mesh, shape, full, report, name)
+        # default: replicate, but note it
+        if report is not None and np.prod(shape) > 1e6:
+            report.fallbacks.append(f"{name}: NO RULE (replicated, "
+                                    f"{np.prod(shape):.2e} elems)")
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+# ------------------------------------------------------------- batch rules
+
+def batch_shardings(mesh: Mesh, batch_specs: dict,
+                    report: ShardingReport | None = None) -> dict:
+    out = {}
+    for k, v in batch_specs.items():
+        logical = ("dp",) + (None,) * (len(v.shape) - 1)
+        out[k] = resolve(mesh, v.shape, logical, report, f"batch/{k}")
+    return out
+
+
+def cache_shardings(mesh: Mesh, cache_specs: PyTree, global_batch: int,
+                    report: ShardingReport | None = None) -> PyTree:
+    """Decode-cache shardings.  Batch over dp when divisible; for
+    global_batch=1 long-context decode, shard the SEQUENCE axis of KV caches
+    over 'data' (sequence parallelism) instead."""
+    env_dp_size = int(np.prod([mesh.shape[a]
+                               for a in logical_env(mesh)["dp"]]))
+    seq_parallel = (global_batch % env_dp_size != 0)
+
+    def leaf(path, x):
+        name = _path_str(path)
+        shape = x.shape
+        if name.endswith("pos") or x.ndim == 0:
+            return NamedSharding(mesh, P())
+        if re.search(r"(^|/)(k|v|xk|xv)(_\d+)?$", name):
+            # (layers, B, KH, S, hd) or (L, B, KH, F, hd)
+            if seq_parallel:
+                logical = (None, None, "tp", "sp", None)
+            else:
+                logical = (None, "dp", "tp", None, None)
+        elif re.search(r"state(_\d+)?$", name):
+            logical = (None, "dp", "tp", None, None) if not seq_parallel \
+                else (None, None, "tp", None, None)
+        elif re.search(r"conv(_\d+)?$", name):
+            logical = (None, "dp", None, "tp") if not seq_parallel \
+                else (None, None, None, "tp")
+        else:
+            logical = (None,) * x.ndim
+        return resolve(mesh, shape, logical, report, f"cache/{name}")
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_specs)
+
+
+def attach(specs: PyTree, shardings: PyTree) -> PyTree:
+    """Attach shardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs, shardings)

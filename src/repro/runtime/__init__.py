@@ -1,0 +1,2 @@
+from repro.runtime.watchdog import StragglerWatchdog, StepStats  # noqa: F401
+from repro.runtime.elastic import ElasticController  # noqa: F401

@@ -1,0 +1,72 @@
+"""Straggler mitigation / step-time watchdog.
+
+On a real pod, stragglers show up as step-time outliers (a slow host drags
+every collective).  The watchdog keeps a robust running estimate
+(median + MAD over a sliding window) and classifies each step; on repeated
+straggling it fires a callback — in production that triggers (a) an early
+checkpoint, (b) host cordon + elastic restart via
+``repro.runtime.elastic`` / ``repro.checkpoint.remesh``.  The policy logic
+is fully testable off-hardware (tests feed synthetic step times).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StepStats:
+    step: int
+    duration_s: float
+    median_s: float
+    is_straggler: bool
+
+
+class StragglerWatchdog:
+    def __init__(self, window: int = 50, threshold: float = 3.0,
+                 patience: int = 3,
+                 on_straggle: Callable[[StepStats], None] | None = None):
+        self.window = deque(maxlen=window)
+        self.threshold = threshold
+        self.patience = patience
+        self.on_straggle = on_straggle
+        self.consecutive = 0
+        self.history: list = []
+        self._t0: float | None = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int, duration_s: float | None = None) -> StepStats:
+        if duration_s is None:
+            assert self._t0 is not None
+            duration_s = time.monotonic() - self._t0
+        med = self._median() if self.window else duration_s
+        mad = self._mad(med) if len(self.window) >= 5 else med
+        is_straggler = (len(self.window) >= 5
+                        and duration_s > med + self.threshold * max(mad, 1e-9))
+        self.window.append(duration_s)
+        stats = StepStats(step=step, duration_s=duration_s, median_s=med,
+                          is_straggler=is_straggler)
+        self.history.append(stats)
+        if is_straggler:
+            self.consecutive += 1
+            if self.consecutive >= self.patience and self.on_straggle:
+                self.on_straggle(stats)
+                self.consecutive = 0
+        else:
+            self.consecutive = 0
+        return stats
+
+    def _median(self) -> float:
+        s = sorted(self.window)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def _mad(self, med: float) -> float:
+        devs = sorted(abs(x - med) for x in self.window)
+        n = len(devs)
+        return devs[n // 2] if n % 2 else 0.5 * (devs[n // 2 - 1] + devs[n // 2])

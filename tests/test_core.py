@@ -1,0 +1,314 @@
+"""Unit + property tests for the paper's core: TT algebra, photonic meshes,
+BP-free derivative estimators, SPSA/ZO-signSGD, and the HJB PINN."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import photonic, pinn, stein, tt, zoo
+
+
+# ------------------------------------------------------------------------ TT
+
+def test_tt_spec_param_count_matches_paper():
+    """Paper §4.2: 1024×1024 = [4,8,4,8]·[8,4,8,4], ranks [1,2,1,2,1]
+    → 256 params/layer; TONN total 2·256 + 1024 = 1,536."""
+    spec = tt.TTSpec(out_modes=(4, 8, 4, 8), in_modes=(8, 4, 8, 4),
+                     ranks=(1, 2, 1, 2, 1))
+    assert spec.num_params == 256
+    assert spec.out_dim == spec.in_dim == 1024
+    assert 2 * spec.num_params + 1024 == 1536
+
+
+def test_tt_matvec_equals_dense():
+    spec = tt.auto_factorize(96, 80, L=3, max_rank=5)
+    cores = tt.tt_init(jax.random.PRNGKey(0), spec)
+    w = tt.tt_to_full(cores, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (11, 80))
+    np.testing.assert_allclose(np.asarray(tt.tt_matvec(cores, x, spec)),
+                               np.asarray(x @ w.T), atol=1e-5, rtol=1e-5)
+
+
+def test_tt_svd_full_rank_roundtrip():
+    spec = tt.TTSpec((3, 4), (5, 2), (1, 12, 1))  # r1 = min(12, 10) clamps ok
+    w = np.random.RandomState(0).randn(12, 10)
+    cores = tt.tt_svd(w, spec)
+    w2 = tt.tt_to_full(cores, spec)
+    np.testing.assert_allclose(np.asarray(w2), w, atol=1e-5)
+
+
+def test_tt_svd_truncation_is_best_effort():
+    """Low-rank target: reconstruction error bounded by discarded SVs."""
+    rs = np.random.RandomState(1)
+    w = rs.randn(16, 4) @ rs.randn(4, 16)  # rank ≤ 4
+    spec = tt.TTSpec((4, 4), (4, 4), (1, 4, 1))
+    cores = tt.tt_svd(w, spec)
+    w2 = tt.tt_to_full(cores, spec)
+    # unfolding rank of a rank-4 matrix folded this way can exceed 4, so only
+    # check that we got a sane approximation, not exactness
+    rel = np.linalg.norm(np.asarray(w2) - w) / np.linalg.norm(w)
+    assert rel < 0.9
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(6, 4096))
+def test_balanced_factorization_property(n):
+    f = tt._balanced_factorization(n, 3)
+    assert int(np.prod(f)) == n
+    assert all(x >= 1 for x in f)
+
+
+def test_contraction_flops_positive_and_scales_with_batch():
+    spec = tt.auto_factorize(1024, 1024, L=4, max_rank=2)
+    assert spec.contraction_flops(2) == 2 * spec.contraction_flops(1)
+    # TT flops far below dense 2·B·M·N
+    assert spec.contraction_flops(1) < 2 * 1024 * 1024
+
+
+# ------------------------------------------------------------------ photonic
+
+def test_rectangular_layout_mzi_count():
+    for p in (2, 5, 8, 16):
+        assert photonic.rectangular_layout(p).num_mzis == p * (p - 1) // 2
+
+
+def test_mesh_is_orthogonal():
+    lay = photonic.rectangular_layout(9)
+    ph = 0.7 * jax.random.normal(jax.random.PRNGKey(0), lay.phase_shape())
+    d = jnp.ones((9,))
+    u = photonic.mesh_matrix(lay, ph, d)
+    np.testing.assert_allclose(np.asarray(u @ u.T), np.eye(9), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(p=st.integers(2, 24))
+def test_decompose_reconstruct_orthogonal(p):
+    rs = np.random.RandomState(p)
+    q, _ = np.linalg.qr(rs.randn(p, p))
+    lay, ph, d = photonic.decompose_orthogonal(q)
+    u = photonic.mesh_matrix(lay, ph, d)
+    np.testing.assert_allclose(np.asarray(u), q, atol=1e-4)
+
+
+def test_mesh_transpose_inverts():
+    lay = photonic.rectangular_layout(8)
+    ph = jax.random.normal(jax.random.PRNGKey(1), lay.phase_shape())
+    d = jnp.ones((8,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    y = photonic.mesh_apply(lay, ph, d, x)
+    x2 = photonic.mesh_apply(lay, ph, d, y, transpose=True)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x), atol=1e-5)
+
+
+def test_photonic_matrix_from_dense_roundtrip():
+    w = np.random.RandomState(3).randn(6, 10)
+    pm = photonic.PhotonicMatrix(6, 10)
+    params = pm.from_dense(w)
+    np.testing.assert_allclose(np.asarray(pm.to_dense(params)), w, atol=1e-4)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 10))
+    np.testing.assert_allclose(np.asarray(pm.apply(params, x)),
+                               np.asarray(x @ w.T), atol=1e-4)
+
+
+def test_noise_model_perturbs_phases():
+    nm = photonic.NoiseModel(gamma_std=0.01, crosstalk=0.01,
+                             phase_bias_scale=1.0, enabled=True)
+    ph = jnp.zeros((4, 3))
+    noise = nm.sample(jax.random.PRNGKey(0), ph.shape)
+    eff = nm.effective_phases(ph, noise)
+    assert float(jnp.max(jnp.abs(eff))) > 0.0  # bias alone moves zero phases
+    nm_off = photonic.NoiseModel(enabled=False)
+    eff_off = nm_off.effective_phases(ph, nm_off.sample(jax.random.PRNGKey(0), ph.shape))
+    np.testing.assert_allclose(np.asarray(eff_off), 0.0)
+
+
+# ---------------------------------------------------------------- estimators
+
+def test_fd_estimate_on_quadratic():
+    """FD is exact (to truncation) for quadratics: u = xᵀAx + bᵀx."""
+    rs = np.random.RandomState(0)
+    A = jnp.asarray(rs.randn(5, 5) * 0.1)
+    b = jnp.asarray(rs.randn(5))
+    f = lambda x: jnp.einsum("bi,ij,bj->b", x, A, x) + x @ b
+    x = jax.random.uniform(jax.random.PRNGKey(0), (7, 5))
+    est = stein.fd_estimate(f, x, h=1e-2)  # h large enough that f32 rounding
+    grad_true = jax.vmap(jax.grad(lambda p: f(p[None])[0]))(x)  # ε/h² stays small
+    np.testing.assert_allclose(np.asarray(est.grad), np.asarray(grad_true),
+                               atol=1e-3)
+    hess_true = jnp.diag(A + A.T)
+    np.testing.assert_allclose(np.asarray(est.hess_diag),
+                               np.tile(np.asarray(hess_true), (7, 1)), atol=2e-2)
+
+
+def test_stein_estimate_on_quadratic():
+    rs = np.random.RandomState(1)
+    A = jnp.asarray(rs.randn(4, 4) * 0.1)
+    f = lambda x: jnp.einsum("bi,ij,bj->b", x, A, x)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (5, 4))
+    est = stein.stein_estimate(f, x, jax.random.PRNGKey(1), sigma=0.05,
+                               num_samples=4096)
+    grad_true = jax.vmap(jax.grad(lambda p: f(p[None])[0]))(x)
+    np.testing.assert_allclose(np.asarray(est.grad), np.asarray(grad_true),
+                               atol=0.15)
+    hess_true = np.tile(np.asarray(jnp.diag(A + A.T)), (5, 1))
+    np.testing.assert_allclose(np.asarray(est.hess_diag), hess_true, atol=0.3)
+
+
+def test_num_fd_inferences_matches_paper():
+    assert stein.num_fd_inferences(21) == 42  # paper §4.2
+
+
+# ----------------------------------------------------------------------- ZOO
+
+def test_spsa_gradient_direction_on_quadratic():
+    """E[SPSA grad] = true grad; with many samples the cosine must be high."""
+    target = jnp.asarray(np.random.RandomState(0).randn(16))
+    loss_fn = lambda p: jnp.sum((p["w"] - target) ** 2)
+    params = {"w": jnp.zeros(16)}
+    cfg = zoo.SPSAConfig(num_samples=256, mu=1e-3)
+    grad, base = zoo.spsa_gradient(loss_fn, params, jax.random.PRNGKey(0), cfg)
+    g_true = -2.0 * target
+    cos = float(jnp.dot(grad["w"], g_true)
+                / (jnp.linalg.norm(grad["w"]) * jnp.linalg.norm(g_true)))
+    assert cos > 0.7, cos
+    assert float(base) == pytest.approx(float(jnp.sum(target ** 2)), rel=1e-5)
+
+
+def test_zo_signsgd_decreases_quadratic_loss():
+    target = jnp.asarray(np.random.RandomState(1).randn(8))
+    loss_fn = lambda p: jnp.sum((p["w"] - target) ** 2)
+    params = {"w": jnp.zeros(8)}
+    state = zoo.ZOState.create(0)
+    cfg = zoo.SPSAConfig(num_samples=32, mu=1e-3)
+    first = float(loss_fn(params))
+    for _ in range(60):
+        params, state, _ = zoo.zo_signsgd_step(loss_fn, params, state,
+                                               lr=0.02, cfg=cfg)
+    assert float(loss_fn(params)) < 0.2 * first
+
+
+def test_distributed_zo_equals_single_host():
+    """Sharded perturbation evaluation + loss-vector merge must reproduce the
+    single-host gradient bit-for-bit (scalar-only communication)."""
+    target = jnp.asarray(np.random.RandomState(2).randn(12))
+    loss_fn = lambda p: jnp.sum((p["w"] - target) ** 2)
+    params = {"w": jnp.ones(12)}
+    cfg = zoo.SPSAConfig(num_samples=8, mu=1e-2)
+    key = jax.random.PRNGKey(7)
+    base = loss_fn(params)
+    # single host
+    losses_full = zoo.spsa_losses(loss_fn, params, key, cfg)
+    g_full = zoo.spsa_gradient_from_losses(params, key, losses_full, base, cfg)
+    # two workers evaluating slices [0,4) and [4,8), merged by addition (psum)
+    l0 = zoo.spsa_losses(loss_fn, params, key, cfg, index_shard=(0, 4))
+    l1 = zoo.spsa_losses(loss_fn, params, key, cfg, index_shard=(4, 8))
+    g_dist = zoo.spsa_gradient_from_losses(params, key, l0 + l1, base, cfg)
+    np.testing.assert_array_equal(np.asarray(g_full["w"]), np.asarray(g_dist["w"]))
+
+
+# ---------------------------------------------------------------------- PINN
+
+def test_hjb_exact_solution_satisfies_pde_residual():
+    """Plug the exact u into the FD residual: loss must be ~0."""
+    cfg = pinn.PINNConfig(hidden=8, mode="dense")
+    model = pinn.HJBPinn(cfg)
+    xt = pinn.sample_collocation(jax.random.PRNGKey(0), 64)
+    est = stein.fd_estimate(pinn.hjb_exact_solution, xt, h=1e-2)
+    D = 20
+    resid = (est.grad[:, D] + jnp.sum(est.hess_diag[:, :D], -1)
+             - 0.05 * jnp.sum(est.grad[:, :D] ** 2, -1) + 2.0)
+    # float32 FD second derivatives carry ~ε·|u|/h² noise per dim
+    assert float(jnp.mean(resid ** 2)) < 5e-2
+
+
+def test_ansatz_satisfies_terminal_condition():
+    cfg = pinn.PINNConfig(hidden=16, mode="dense")
+    model = pinn.HJBPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (9, 20))
+    xt = jnp.concatenate([x, jnp.ones((9, 1))], axis=-1)  # t = 1
+    u = model.u(params, xt)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(jnp.sum(jnp.abs(x), -1)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["dense", "tt", "onn", "tonn"])
+def test_pinn_modes_forward(mode):
+    cfg = pinn.PINNConfig(hidden=16, mode=mode, tt_L=2, tt_rank=2)
+    model = pinn.HJBPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    xt = pinn.sample_collocation(jax.random.PRNGKey(1), 5)
+    u = model.u(params, xt)
+    assert u.shape == (5,)
+    assert bool(jnp.all(jnp.isfinite(u)))
+    loss = pinn.hjb_residual_loss(model, params, xt)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_pinn_param_counts():
+    """TT mode with the paper's exact factorization reproduces 1,536 trainable
+    photonic parameters (+ biases, which the paper folds into the digital side)."""
+    cfg = pinn.PINNConfig(hidden=1024, mode="tt", tt_rank=2, tt_L=4)
+    model = pinn.HJBPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    core_params = sum(c.size for i in range(2) for c in params[f"cores{i}"])
+    assert core_params == 512
+    assert core_params + params["w2"].size == 1536
+
+
+def test_tonn_noise_robustness_hook():
+    """on-chip mode: noise sampled once, forward remains finite."""
+    nm = photonic.NoiseModel(enabled=True, gamma_std=0.002, crosstalk=0.005,
+                             phase_bias_scale=1.0)
+    cfg = pinn.PINNConfig(hidden=16, mode="tonn", tt_L=2, tt_rank=2, noise=nm)
+    model = pinn.HJBPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    noise = model.sample_noise(jax.random.PRNGKey(1))
+    xt = pinn.sample_collocation(jax.random.PRNGKey(2), 4)
+    u = model.u(params, xt, noise)
+    assert bool(jnp.all(jnp.isfinite(u)))
+    # noise must actually change the output
+    u0 = model.u(params, xt, None)
+    assert float(jnp.max(jnp.abs(u - u0))) > 1e-6
+
+
+def test_fd_fast_matches_generic_fd():
+    """Incremental rank-1 FD forward (§Perf cell 3): the u-value stencil must
+    match the generic perturbed-forward stencil.  (Loss values are compared
+    loosely — second-difference f32 rounding noise ~ε·|u|/h² differs between
+    the two numerically-distinct but algebraically-equal evaluations.)"""
+    import dataclasses
+    cfg = pinn.PINNConfig(hidden=64, mode="tt", tt_rank=2, tt_L=3, deriv="fd")
+    model = pinn.HJBPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    xt = pinn.sample_collocation(jax.random.PRNGKey(1), 32)
+    h = cfg.fd_step
+    B, D = xt.shape
+    eye = jnp.eye(D) * h
+    stacked = jnp.concatenate(
+        [xt[None], xt[None] + eye[:, None], xt[None] - eye[:, None]], 0)
+    vals_ref = model.u(params, stacked.reshape(-1, D)).reshape(2 * D + 1, B)
+    vals_fast = model.fd_u_stencil(params, xt, h)
+    np.testing.assert_allclose(np.asarray(vals_fast), np.asarray(vals_ref),
+                               atol=5e-5, rtol=5e-5)
+    loss_fd = pinn.hjb_residual_loss(model, params, xt)
+    cfg_fast = dataclasses.replace(cfg, deriv="fd_fast")
+    model_fast = pinn.HJBPinn(cfg_fast)
+    loss_fast = pinn.hjb_residual_loss(model_fast, params, xt)
+    # losses agree within second-difference rounding noise
+    np.testing.assert_allclose(float(loss_fd), float(loss_fast),
+                               rtol=0.3, atol=0.3)
+
+
+def test_vectorized_spsa_matches_sequential():
+    cfg_s = zoo.SPSAConfig(num_samples=6, mu=1e-2, vectorized=False)
+    cfg_v = zoo.SPSAConfig(num_samples=6, mu=1e-2, vectorized=True)
+    target = jnp.asarray(np.random.RandomState(5).randn(10))
+    lf = lambda p: jnp.sum((p["w"] - target) ** 2)
+    params = {"w": jnp.zeros(10)}
+    key = jax.random.PRNGKey(11)
+    ls = zoo.spsa_losses(lf, params, key, cfg_s)
+    lv = zoo.spsa_losses(lf, params, key, cfg_v)
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lv), rtol=1e-6)

@@ -1,0 +1,141 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tt
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- tt_contract
+
+TT_CASES = [
+    # (out, in, L, rank, batch)
+    (64, 64, 2, 2, 16),
+    (128, 96, 3, 4, 33),     # unaligned batch
+    (1024, 1024, 4, 2, 64),  # the paper's TONN layer
+    (256, 512, 4, 8, 7),
+    (48, 60, 3, 16, 128),    # rank > unfolding rank (clamped internally)
+]
+
+
+@pytest.mark.parametrize("out_dim,in_dim,L,rank,batch", TT_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tt_contract_matches_ref(out_dim, in_dim, L, rank, batch, dtype):
+    spec = tt.auto_factorize(out_dim, in_dim, L=L, max_rank=rank)
+    cores = [c.astype(dtype) for c in tt.tt_init(jax.random.PRNGKey(0), spec)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, in_dim), dtype=dtype)
+    y_ref = ref.tt_contract_ref(x, cores, spec)
+    y_k = ops.tt_linear(x, cores, spec, mode="interpret")
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_tt_contract_batch_dims():
+    """Leading batch dims of any rank are flattened and restored."""
+    spec = tt.auto_factorize(32, 32, L=2, max_rank=4)
+    cores = tt.tt_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 32))
+    y = ops.tt_linear(x, cores, spec, mode="interpret")
+    assert y.shape == (3, 5, 32)
+    y_flat = ops.tt_linear(x.reshape(15, 32), cores, spec, mode="interpret")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_flat).reshape(3, 5, 32),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    out_dim=st.sampled_from([16, 32, 64, 96]),
+    in_dim=st.sampled_from([16, 32, 64, 96]),
+    L=st.integers(2, 4),
+    rank=st.sampled_from([1, 2, 4]),
+    batch=st.integers(1, 40),
+)
+def test_tt_contract_property(out_dim, in_dim, L, rank, batch):
+    """Property: kernel == (x @ densified(W).T) for arbitrary specs."""
+    spec = tt.auto_factorize(out_dim, in_dim, L=L, max_rank=rank)
+    cores = tt.tt_init(jax.random.PRNGKey(42), spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (batch, in_dim))
+    w = tt.tt_to_full(cores, spec)
+    y_dense = x @ w.T
+    y_k = ops.tt_linear(x, cores, spec, mode="interpret")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------ flash attention
+
+FA_CASES = [
+    # (B, H, KH, Sq, Sk, D, causal, window)
+    (1, 4, 4, 128, 128, 64, True, None),     # MHA causal
+    (2, 8, 2, 256, 256, 64, True, None),     # GQA
+    (1, 8, 8, 200, 200, 32, True, None),     # unaligned seq
+    (2, 4, 2, 256, 256, 64, True, 100),      # sliding window
+    (1, 4, 2, 32, 256, 64, True, None),      # chunked prefill (Sq < Sk)
+    (1, 4, 1, 1, 300, 64, True, None),       # single-query decode
+    (1, 4, 4, 128, 128, 64, False, None),    # bidirectional (encoder)
+]
+
+
+@pytest.mark.parametrize("B,H,KH,Sq,Sk,D,causal,window", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KH, Sq, Sk, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), dtype=dtype)
+    k = jax.random.normal(ks[1], (B, KH, Sk, D), dtype=dtype)
+    v = jax.random.normal(ks[2], (B, KH, Sk, D), dtype=dtype)
+    o_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+    o_k = ops.attention(q, k, v, causal=causal, window=window, mode="interpret")
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    """Output must not depend on the (bq, bk) tiling."""
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 192, 32))
+    k = jax.random.normal(ks[1], (1, 2, 192, 32))
+    v = jax.random.normal(ks[2], (1, 2, 192, 32))
+    o1 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    h=st.sampled_from([2, 4, 8]),
+    kh_div=st.sampled_from([1, 2]),
+    s=st.integers(16, 160),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(h, kh_div, s, d, causal):
+    kh = max(1, h // kh_div)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, h, s, d))
+    k = jax.random.normal(ks[1], (1, kh, s, d))
+    v = jax.random.normal(ks[2], (1, kh, s, d))
+    o_ref = ref.attention_ref(q, k, v, causal=causal)
+    o_k = ops.attention(q, k, v, causal=causal, mode="interpret")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Property: each output row lies in the convex hull of V rows →
+    max |out| <= max |v| (softmax weights sum to 1)."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 16))
+    k = jax.random.normal(ks[1], (1, 2, 64, 16))
+    v = jax.random.normal(ks[2], (1, 2, 64, 16))
+    o = ops.attention(q, k, v, causal=True, mode="interpret")
+    assert float(jnp.max(jnp.abs(o))) <= float(jnp.max(jnp.abs(v))) + 1e-5
