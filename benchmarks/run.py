@@ -59,24 +59,10 @@ def bench_kernels(rows):
 
 def bench_zo_step(rows):
     """Paper's training loop: one full BP-free step (11 loss evals × 42
-    FD inferences × batch 100) on the TT-1024 PINN."""
-    from repro.core import pinn, zoo
-    cfg = pinn.PINNConfig(hidden=1024, mode="tt", tt_rank=2, tt_L=4)
-    model = pinn.HJBPinn(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    xt = pinn.sample_collocation(jax.random.PRNGKey(1), 100)
-    scfg = zoo.SPSAConfig(num_samples=10, mu=0.01)
-    state = zoo.ZOState.create(0)
-
-    @jax.jit
-    def step(p, s):
-        lf = lambda q: pinn.hjb_residual_loss(model, q, xt)
-        return zoo.zo_signsgd_step(lf, p, s, lr=1e-3, cfg=scfg)
-
-    us = _time(lambda: step(params, state)[2], n=3)
-    rows.append({"name": "zo/tt1024_full_step(11x42x100 inferences)",
-                 "us_per_call": round(us, 1),
-                 "derived": "1536 trainable params"})
+    FD inferences × batch 100), fused vs the seed sequential path."""
+    from benchmarks import zo_step
+    result = zo_step.run(hidden=1024, repeats=3, modes=("tonn", "tt"))
+    rows += zo_step.summarize(result)
 
 
 def main() -> None:

@@ -22,12 +22,16 @@ from repro.core.photonic import NoiseModel
 
 def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
             epochs: int = 600, batch: int = 100, seed: int = 0,
-            tt_rank: int = 2, tt_L: int = 3, lr: float = 2e-3) -> dict:
+            tt_rank: int = 2, tt_L: int = 3, lr: float = 2e-3,
+            sequential: bool = False) -> dict:
     """One Table-1 cell.  Returns {val_mse, params, seconds}.
 
     off-chip = BP training on the ideal model, then (if noise) map the
     trained weights onto noisy hardware and report the degraded loss.
-    on-chip = ZO-signSGD directly on the (noisy) photonic parameters.
+    on-chip = ZO-signSGD directly on the (noisy) photonic parameters —
+    by default through the fused multi-perturbation path (identical ξ and
+    losses to the serial sweep); ``sequential=True`` forces the
+    one-mesh-at-a-time evaluation order of a physical photonic chip.
     """
     if noise and mode in ("tt", "dense"):
         # hardware noise lives in the MZI phase domain: noisy rows need the
@@ -47,11 +51,16 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
         # paper's proposed method: forward-only ZO-signSGD on-device
         scfg = zoo.SPSAConfig(num_samples=10, mu=0.01)
         state = zoo.ZOState.create(seed + 1)
+        use_batched = not sequential and mode in ("dense", "tt", "tonn")
 
         @jax.jit
         def step(params, state, xt, lr_t):
             lf = lambda p: pinn.hjb_residual_loss(model, p, xt, hw_noise)
-            return zoo.zo_signsgd_step(lf, params, state, lr=lr_t, cfg=scfg)
+            blf = (None if not use_batched else
+                   lambda sp: pinn.hjb_residual_losses_stacked(
+                       model, sp, xt, hw_noise))
+            return zoo.zo_signsgd_step(lf, params, state, lr=lr_t, cfg=scfg,
+                                       batched_loss_fn=blf)
 
         for i in range(epochs):
             xt = pinn.sample_collocation(jax.random.fold_in(key, i), batch)

@@ -1,0 +1,193 @@
+"""One full ZO-signSGD training step: fused multi-perturbation hot path vs
+the seed's sequential unfused sweep (DESIGN.md §Perf).
+
+Arms per PINN mode (paper config: 20-dim HJB, N=10 SPSA samples):
+
+  * ``naive_seed``  — the seed hot path: generic FD stencil (43 stacked
+                      inferences), N+1 sequential loss evaluations, unfused
+                      ``tt_matvec`` chain, ξ regenerated twice per step.
+  * ``fused``       — this repo's hot path: incremental rank-1 FD stencil,
+                      all N+1 models evaluated by ONE stacked program
+                      (``hjb_residual_losses_stacked`` →
+                      ``tt_contract_batched`` on TPU / stacked jnp chain on
+                      CPU), ξ materialized once and reused for the gradient.
+
+Correctness cross-check, for identical ξ (same PRNG key):
+
+  * the stencil u-values of every perturbed model must agree between fused
+    and sequential evaluation to strict float32 forward tolerance (1e-4
+    relative), and
+  * the SPSA loss vectors must agree within the FD noise floor: the
+    residual loss squares second differences ``(u₊ − 2u₀ + u₋)/h²``, so
+    f32 forward rounding (reassociated contractions, polynomial sine — all
+    ~1e-7 relative) is amplified by 1/h² = 1e4 into ~1e-3..1e-2 relative
+    loss deviations.  This is inherent to the estimator, not the fusion:
+    the seed's own fd vs fd_fast test tolerates 0.3 relative for the same
+    reason, and small models amplify it further (their residuals
+    are nearer zero).  Threshold here: 1e-1 (DESIGN.md §Perf); the paper
+    config measures 5e-3..2e-2.
+
+Emits ``BENCH_zo_step.json`` so CI tracks the perf trajectory.
+
+    PYTHONPATH=src python benchmarks/zo_step.py --hidden 1024 --modes tonn,tt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pinn, zoo
+
+
+def _time_pair(fn_a, fn_b, repeats: int = 3) -> tuple:
+    """Median wall-times (ms) of two arms, interleaved A,B,A,B,... so
+    machine-load drift hits both arms equally (shared CI boxes)."""
+    jax.block_until_ready(fn_a())  # compile
+    jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    med = lambda ts: sorted(ts)[len(ts) // 2] * 1e3
+    return med(ta), med(tb)
+
+
+def _make_step(model, scfg, xt, noise, batched: bool):
+    def step(params, state):
+        lf = lambda p: pinn.hjb_residual_loss(model, p, xt, noise)
+        blf = (None if not batched else
+               lambda sp: pinn.hjb_residual_losses_stacked(
+                   model, sp, xt, noise))
+        return zoo.zo_signsgd_step(lf, params, state, lr=1e-3, cfg=scfg,
+                                   batched_loss_fn=blf)
+    return jax.jit(step)
+
+
+def bench_mode(mode: str, hidden: int, batch: int, num_samples: int,
+               tt_rank: int, tt_L: int, repeats: int, seed: int = 0) -> dict:
+    base_cfg = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=tt_rank,
+                               tt_L=tt_L)
+    naive_cfg = dataclasses.replace(base_cfg, deriv="fd",
+                                    use_fused_kernel=False)
+    fused_cfg = dataclasses.replace(base_cfg, deriv="fd_fast",
+                                    use_fused_kernel=True)
+    scfg = zoo.SPSAConfig(num_samples=num_samples, mu=0.01)
+    key = jax.random.PRNGKey(seed)
+    xt = pinn.sample_collocation(jax.random.fold_in(key, 1), batch)
+    state = zoo.ZOState.create(seed + 1)
+
+    naive_model = pinn.HJBPinn(naive_cfg)
+    fused_model = pinn.HJBPinn(fused_cfg)
+    params = naive_model.init(key)
+
+    naive_step = _make_step(naive_model, scfg, xt, None, batched=False)
+    fused_step = _make_step(fused_model, scfg, xt, None, batched=True)
+    naive_ms, fused_ms = _time_pair(lambda: naive_step(params, state)[2],
+                                    lambda: fused_step(params, state)[2],
+                                    repeats)
+
+    # correctness for identical ξ (same key), fused vs sequential-unfused
+    # on the SAME derivative estimator (fd_fast): strict tolerance on the
+    # stencil u-values, FD-noise-floor tolerance on the losses (see module
+    # docstring).
+    check_cfg = dataclasses.replace(base_cfg, deriv="fd_fast",
+                                    use_fused_kernel=False)
+    check_model = pinn.HJBPinn(check_cfg)
+    sub = jax.random.fold_in(key, 2)
+    xis = zoo.sample_perturbations(sub, params, num_samples)
+    sp = jax.tree.map(lambda p, z: p + scfg.mu * z, params, xis)
+    prepared = fused_model.prepare_params_stacked(sp, None)
+    u_fused = fused_model.fd_u_stencil_stacked(prepared, xt,
+                                               fused_cfg.fd_step)
+    u_seq = jnp.stack([
+        check_model.fd_u_stencil(jax.tree.map(lambda z: z[i], sp), xt,
+                                 check_cfg.fd_step)
+        for i in range(num_samples)])
+    u_rel = float(jnp.max(jnp.abs(u_fused - u_seq)
+                          / (jnp.abs(u_seq) + 1e-6)))
+
+    lf_seq = lambda p: pinn.hjb_residual_loss(check_model, p, xt)
+    l_seq = zoo.spsa_losses(lf_seq, params, sub, scfg)
+    l_fused = zoo.spsa_losses(
+        lf_seq, params, sub, scfg,
+        batched_loss_fn=lambda s: pinn.hjb_residual_losses_stacked(
+            fused_model, s, xt))
+    # normalize by the largest loss: tiny near-zero entries otherwise blow
+    # up the per-element relative error without any actual disagreement
+    loss_rel = float(jnp.max(jnp.abs(l_fused - l_seq))
+                     / (float(jnp.max(jnp.abs(l_seq))) + 1e-12))
+
+    return {
+        "mode": mode,
+        "naive_seed_ms": round(naive_ms, 2),
+        "fused_ms": round(fused_ms, 2),
+        "speedup": round(naive_ms / fused_ms, 2),
+        "u_max_rel_err": u_rel,
+        "loss_max_rel_err": loss_rel,
+        "losses_agree": bool(u_rel < 1e-4 and loss_rel < 1e-1),
+    }
+
+
+def run(hidden: int = 1024, batch: int = 100, num_samples: int = 10,
+        tt_rank: int = 2, tt_L: int = 4, repeats: int = 3,
+        modes: tuple = ("tonn", "tt")) -> dict:
+    rows = [bench_mode(m, hidden, batch, num_samples, tt_rank, tt_L, repeats)
+            for m in modes]
+    return {
+        "config": {"hidden": hidden, "batch": batch,
+                   "num_samples": num_samples, "tt_rank": tt_rank,
+                   "tt_L": tt_L, "space_dim": 20,
+                   "backend": jax.default_backend()},
+        "rows": rows,
+    }
+
+
+def summarize(result: dict) -> list:
+    """Rows for benchmarks/run.py's CSV."""
+    out = []
+    for r in result["rows"]:
+        out.append({
+            "name": f"zo_step/{r['mode']}-fused",
+            "us_per_call": round(r["fused_ms"] * 1e3, 1),
+            "derived": (f"speedup={r['speedup']}x vs naive "
+                        f"({r['naive_seed_ms']}ms), "
+                        f"loss_err={r['loss_max_rel_err']:.1e}"),
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hidden", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=100)
+    ap.add_argument("--num-samples", type=int, default=10)
+    ap.add_argument("--tt-rank", type=int, default=2)
+    ap.add_argument("--tt-L", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--modes", default="tonn,tt")
+    ap.add_argument("--out", default="BENCH_zo_step.json")
+    args = ap.parse_args()
+
+    result = run(hidden=args.hidden, batch=args.batch,
+                 num_samples=args.num_samples, tt_rank=args.tt_rank,
+                 tt_L=args.tt_L, repeats=args.repeats,
+                 modes=tuple(args.modes.split(",")))
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    for r in result["rows"]:
+        assert r["losses_agree"], f"fused/naive divergence: {r}"
+
+
+if __name__ == "__main__":
+    main()

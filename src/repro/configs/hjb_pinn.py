@@ -11,4 +11,10 @@ TONN_OFFCHIP = PINNConfig(hidden=1024, mode="tt", tt_rank=2, tt_L=4)
 TONN_ONCHIP = PINNConfig(hidden=1024, mode="tonn", tt_rank=2, tt_L=4,
                          noise=NoiseModel(enabled=True))
 
+# the fused ZO hot path (DESIGN.md §Perf): incremental FD stencil + TT
+# matvecs routed through the stacked Pallas kernel dispatcher
+TONN_ONCHIP_FUSED = PINNConfig(hidden=1024, mode="tonn", tt_rank=2, tt_L=4,
+                               deriv="fd_fast", use_fused_kernel=True,
+                               noise=NoiseModel(enabled=True))
+
 REDUCED = PINNConfig(hidden=64, mode="tt", tt_rank=2, tt_L=3)

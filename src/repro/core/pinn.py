@@ -36,10 +36,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import photonic, stein, tt
+from repro.core import fastmath, photonic, stein, tt
 
 __all__ = ["PINNConfig", "HJBPinn", "hjb_exact_solution", "sample_collocation",
-           "hjb_residual_loss", "validation_mse"]
+           "hjb_residual_loss", "hjb_residual_losses_stacked", "validation_mse"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,9 +50,12 @@ class PINNConfig:
     tt_rank: int = 2            # paper: ranks [1,2,1,2,1]
     tt_L: int = 4               # paper: 1024 = [4,8,4,8] · [8,4,8,4]
     fd_step: float = 1e-2   # < collocation margin; float32-noise/truncation sweet spot
-    deriv: str = "fd"           # fd | stein
+    deriv: str = "fd"           # fd | fd_fast | stein
     stein_sigma: float = 5e-2
     stein_samples: int = 32
+    use_fused_kernel: bool = False  # route TT matvecs through the Pallas
+    #                                 kernel dispatcher (repro.kernels.ops):
+    #                                 fused VMEM chain on TPU, jnp ref on CPU
     noise: photonic.NoiseModel = dataclasses.field(
         default_factory=lambda: photonic.NoiseModel(enabled=False))
 
@@ -84,6 +87,11 @@ class HJBPinn:
 
     def __init__(self, cfg: PINNConfig):
         self.cfg = cfg
+        self._kron_split: int | None = None
+        # stacked hot path: vectorized polynomial sine (XLA:CPU's jnp.sin is
+        # a scalar libm call); ~2 ulp, within the FD noise floor (DESIGN.md
+        # §Perf).  The sequential photonic-realism path keeps libm sin.
+        self._sin = fastmath.fast_sin if cfg.use_fused_kernel else jnp.sin
         h = cfg.hidden
         if cfg.mode in ("tt", "tonn"):
             # pad the (x,t) input up to a TT-factorizable width (the paper
@@ -107,6 +115,23 @@ class HJBPinn:
                  in spec.core_shapes]
                 for spec in self.specs
             ]
+        if cfg.mode in ("tt", "tonn"):
+            # interior rank-1 split of the hidden layer (paper ranks
+            # [1,2,1,2,1] split at k=2): W1 = W_left ⊗ W_right, enabling the
+            # two-GEMM Kronecker head of the stacked ZO path (DESIGN.md §Perf)
+            self._kron_split = self._find_kron_split(self.specs[1])
+
+    @staticmethod
+    def _find_kron_split(spec) -> int | None:
+        """Most balanced interior index k with r_k == 1 (else None)."""
+        best = None
+        for k in range(1, spec.L):
+            if spec.ranks[k] == 1:
+                bal = abs(int(np.prod(spec.in_modes[:k]))
+                          - int(np.prod(spec.in_modes[k:])))
+                if best is None or bal < best[1]:
+                    best = (k, bal)
+        return None if best is None else best[0]
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> dict:
@@ -167,6 +192,35 @@ class HJBPinn:
         return None
 
     # --------------------------------------------------------------- forward
+    def _densify_cores(self, params: dict, noise: dict | None, i: int) -> list:
+        """TONN layer i: densify each (small) core mesh into its TT-core."""
+        cfg = self.cfg
+        spec = self.specs[i]
+        cores = []
+        for k, pm in enumerate(self.photonic_cores[i]):
+            nz = None if noise is None else noise[f"pcores{i}"][k]
+            w = pm.to_dense(params[f"pcores{i}"][k],
+                            cfg.noise if nz else None, nz)
+            r, m, n, rn = spec.core_shapes[k]
+            cores.append(w.reshape(r, m, n, rn))
+        return cores
+
+    def prepare_params(self, params: dict, noise: dict | None) -> tuple:
+        """Hoist TONN densification: pcores → dense TT-cores ONCE per loss
+        evaluation (the seed re-densified per ``_layer_matvec`` call, i.e.
+        per FD stencil × per SPSA perturbation — DESIGN.md §Perf).
+
+        Returns ``(effective_params, effective_noise)``; a no-op for modes
+        whose forward consumes ``params`` directly (dense / onn / tt) and
+        for already-prepared dicts.
+        """
+        if self.cfg.mode != "tonn" or "cores0" in params:
+            return params, noise
+        eff = {k: v for k, v in params.items() if not k.startswith("pcores")}
+        for i in range(len(self.specs)):
+            eff[f"cores{i}"] = self._densify_cores(params, noise, i)
+        return eff, None  # hardware noise is baked into the dense cores
+
     def _layer_matvec(self, params: dict, noise: dict | None, i: int,
                       x: jax.Array) -> jax.Array:
         cfg = self.cfg
@@ -177,21 +231,18 @@ class HJBPinn:
             nz = None if noise is None else noise[f"p{i}"]
             return pm.apply(params[f"p{i}"], x, cfg.noise if nz else None, nz)
         spec = self.specs[i]
-        if cfg.mode == "tt":
-            return tt.tt_matvec(params[f"cores{i}"], x, spec)
-        # tonn: densify each (small) core mesh, then run the TT chain
-        cores = []
-        for k, pm in enumerate(self.photonic_cores[i]):
-            nz = None if noise is None else noise[f"pcores{i}"][k]
-            w = pm.to_dense(params[f"pcores{i}"][k],
-                            cfg.noise if nz else None, nz)
-            r, m, n, rn = spec.core_shapes[k]
-            cores.append(w.reshape(r, m, n, rn))
+        cores = params.get(f"cores{i}")
+        if cores is None:  # unprepared tonn params: densify on the fly
+            cores = self._densify_cores(params, noise, i)
+        if cfg.use_fused_kernel:
+            from repro.kernels import ops
+            return ops.tt_linear(x, cores, spec)
         return tt.tt_matvec(cores, x, spec)
 
     def f(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
         """Base network f(x,t): (B, in_dim) → (B,)."""
         cfg = self.cfg
+        params, noise = self.prepare_params(params, noise)
         h = xt
         if self.in_pad > cfg.in_dim:
             pad = jnp.zeros(h.shape[:-1] + (self.in_pad - cfg.in_dim,), h.dtype)
@@ -199,10 +250,7 @@ class HJBPinn:
         for i in range(2):
             h = self._layer_matvec(params, noise, i, h) + params[f"b{i}"]
             h = jnp.sin(h)
-        if cfg.mode == "dense":
-            out = h @ params["w2"].T + params["b2"]
-        else:
-            out = h @ params["w2"].T + params["b2"]
+        out = h @ params["w2"].T + params["b2"]
         return out[..., 0]
 
     def u(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
@@ -221,11 +269,31 @@ class HJBPinn:
         eye = jnp.eye(cfg.in_dim, self.in_pad, dtype=jnp.float32)
         return self._layer_matvec(params, noise, 0, eye)      # (in_dim, H)
 
+    def _stencil_f_to_u(self, f: jax.Array, xt: jax.Array, h: float) -> jax.Array:
+        """Transform stencil f-values (2·Din+1, B) into u-values via the
+        ansatz u = (1−t)·f + ‖x‖₁ applied at each perturbed coordinate."""
+        Din = xt.shape[-1]
+        x, t = xt[..., :-1], xt[..., -1]
+        l1 = jnp.sum(jnp.abs(x), axis=-1)                             # (B,)
+        D = self.cfg.space_dim
+        base = (1.0 - t) * f[0] + l1
+        rows = [base[None]]
+        for sgn, off in ((1.0, 1), (-1.0, 1 + Din)):
+            # spatial coords: ‖x ± h e_i‖₁ = ‖x‖₁ ± sgn(x_i)·h (inside domain)
+            lx = l1[None, :] + sgn * h * jnp.sign(x).T                # (D,B)
+            ux = (1.0 - t)[None, :] * f[off:off + D] + lx
+            # temporal coord: t ± h
+            ut = (1.0 - (t + sgn * h))[None, :] * f[off + D:off + D + 1] \
+                + l1[None, :]
+            rows.append(jnp.concatenate([ux, ut], axis=0))
+        return jnp.concatenate(rows, axis=0)                          # (2Din+1,B)
+
     def fd_u_stencil(self, params: dict, xt: jax.Array, h: float,
                      noise: dict | None = None) -> jax.Array:
         """u at [x, x+h·e_1, x−h·e_1, ..., ±h·e_D+1]: (2·in+1, B) values with
         layer 1 computed ONCE (incremental rank-1 FD forward)."""
         cfg = self.cfg
+        params, noise = self.prepare_params(params, noise)
         B, Din = xt.shape
         xp = xt
         if self.in_pad > Din:
@@ -243,25 +311,167 @@ class HJBPinn:
                     + params["b1"])
         f = (a @ params["w2"].T + params["b2"])[..., 0]
         f = f.reshape(2 * Din + 1, B)
-        # transform u = (1−t)f + ‖x‖₁ per stencil point
+        return self._stencil_f_to_u(f, xt, h)
+
+    # --------------------------------------- stacked (multi-perturbation) ZO
+    def prepare_params_stacked(self, stacked: dict, noise: dict | None) -> dict:
+        """``prepare_params`` over a leading perturbation axis P on every
+        leaf: ONE vmapped densification pass for all N SPSA-perturbed models
+        (hardware noise is shared — one physical chip)."""
+        if self.cfg.mode != "tonn" or "cores0" in stacked:
+            return stacked
+        return jax.vmap(lambda p: self.prepare_params(p, noise)[0])(stacked)
+
+    def _layer_matvec_stacked(self, stacked: dict, i: int,
+                              x: jax.Array) -> jax.Array:
+        """Layer-i matvec for P stacked parameter sets.  x: (B', n) shared
+        across the stack or (P, B', n) per-entry; returns (P, B', m)."""
+        cfg = self.cfg
+        if cfg.mode == "dense":
+            sub = "bn,pmn->pbm" if x.ndim == 2 else "pbn,pmn->pbm"
+            return jnp.einsum(sub, x, stacked[f"w{i}"])
+        spec = self.specs[i]
+        cores = stacked[f"cores{i}"]
+        if cfg.use_fused_kernel:
+            from repro.kernels import ops
+            return ops.tt_linear_batched(x, cores, spec)
+        return tt.tt_matvec_stacked(cores, x, spec)
+
+    def _f_head_stacked(self, stacked: dict, a: jax.Array) -> jax.Array:
+        """``f = sin(W1·a + b1) @ w2ᵀ + b2`` for P stacked parameter sets:
+        (P, B', hidden) activations → (P, B') f-values.
+
+        CPU fast path: when the hidden layer's TT ranks contain an interior
+        1 (the paper's [1,2,1,2,1] does, at k=2) the layer decouples into a
+        Kronecker product W1 = W_L ⊗ W_R of two small dense factors, so the
+        matvec is two trailing-dim batched GEMMs with NO relayout passes —
+        the output lands column-PERMUTED, which is free to absorb because
+        z1 only feeds an elementwise sin and the w2 reduction: we permute
+        b1/w2 (1024 floats) instead of the (P, B', 1024) activations.
+        On TPU (pallas/interpret dispatch) the stacked contraction kernel
+        already keeps the chain VMEM-resident, so it is used instead.
+        """
+        cfg = self.cfg
+        P, Bp, _ = a.shape
+        # Kronecker head is part of the fused hot path only: the unfused
+        # stacked sweep stays bit-comparable with the sequential one
+        use_kron = (cfg.use_fused_kernel and cfg.mode in ("tt", "tonn")
+                    and self._kron_split is not None)
+        if use_kron:
+            from repro.kernels import ops
+            use_kron = ops.kernel_mode() == "ref"
+        if use_kron:
+            spec = self.specs[1]
+            k = self._kron_split
+            left = tt.TTSpec(spec.out_modes[:k], spec.in_modes[:k],
+                             tuple(spec.ranks[:k + 1]))
+            right = tt.TTSpec(spec.out_modes[k:], spec.in_modes[k:],
+                              tuple(spec.ranks[k:]))
+            cores = stacked["cores1"]
+            wl = jax.vmap(lambda cs: tt.tt_to_full(cs, left))(
+                list(cores[:k]))                         # (P, ML, NL)
+            wr = jax.vmap(lambda cs: tt.tt_to_full(cs, right))(
+                list(cores[k:]))                         # (P, MR, NR)
+            ML, NL = left.out_dim, left.in_dim
+            MR, NR = right.out_dim, right.in_dim
+            x = a.reshape(P, Bp * NL, NR)
+            x = jax.lax.dot_general(x, wr, (((2,), (2,)), ((0,), (0,))),
+                                    preferred_element_type=jnp.float32)
+            x = x.reshape(P, Bp, NL, MR)
+            z = jax.lax.dot_general(x, wl, (((2,), (2,)), ((0,), (0,))),
+                                    preferred_element_type=jnp.float32)
+            z = z.reshape(P, Bp, cfg.hidden)   # column index = i_R·ML + i_L
+            b1p = stacked["b1"].reshape(P, ML, MR) \
+                .transpose(0, 2, 1).reshape(P, cfg.hidden)
+            w2p = stacked["w2"].reshape(P, ML, MR) \
+                .transpose(0, 2, 1).reshape(P, 1, cfg.hidden)
+            a2 = self._sin(z + b1p[:, None])
+            f = jnp.einsum("pbh,poh->pbo", a2, w2p)
+        else:
+            z = self._layer_matvec_stacked(stacked, 1, a) \
+                + stacked["b1"][:, None]
+            a2 = self._sin(z)
+            f = jnp.einsum("pbh,poh->pbo", a2, stacked["w2"])
+        return (f + stacked["b2"][:, None])[..., 0]
+
+    def fd_u_stencil_stacked(self, stacked: dict, xt: jax.Array,
+                             h: float) -> jax.Array:
+        """``fd_u_stencil`` for P stacked (prepared) parameter sets in one
+        batched program: (P, 2·Din+1, B) u-values.  The collocation stencil
+        is shared across the stack, so layer 1 reads x once per batch tile
+        regardless of P (the fused-kernel analogue of TONN's one optical
+        pass over all perturbed meshes)."""
+        cfg = self.cfg
+        B, Din = xt.shape
+        P = stacked["b0"].shape[0]
+        xp = xt
+        if self.in_pad > Din:
+            xp = jnp.concatenate(
+                [xt, jnp.zeros((B, self.in_pad - Din), xt.dtype)], axis=-1)
+        z0 = self._layer_matvec_stacked(stacked, 0, xp) \
+            + stacked["b0"][:, None]                                  # (P,B,H)
+        eye = jnp.eye(cfg.in_dim, self.in_pad, dtype=jnp.float32)
+        cols = self._layer_matvec_stacked(stacked, 0, eye)            # (P,Din,H)
+        hcols = h * cols
+        z = jnp.concatenate(
+            [z0[:, None],
+             z0[:, None] + hcols[:, :, None],                         # +h e_i
+             z0[:, None] - hcols[:, :, None]], axis=1)        # (P,2Din+1,B,H)
+        a = self._sin(z).reshape(P, (2 * Din + 1) * B, cfg.hidden)
+        f = self._f_head_stacked(stacked, a).reshape(P, 2 * Din + 1, B)
+        return jax.vmap(lambda fv: self._stencil_f_to_u(fv, xt, h))(f)
+
+    def f_stacked(self, stacked: dict, xt: jax.Array) -> jax.Array:
+        """Base network for P stacked (prepared) parameter sets over a
+        SHARED input batch: (B, in_dim) → (P, B)."""
+        cfg = self.cfg
+        h = xt
+        if self.in_pad > cfg.in_dim:
+            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - cfg.in_dim,), h.dtype)
+            h = jnp.concatenate([h, pad], axis=-1)
+        a = self._sin(self._layer_matvec_stacked(stacked, 0, h)
+                      + stacked["b0"][:, None])
+        return self._f_head_stacked(stacked, a)
+
+    def u_stacked(self, stacked: dict, xt: jax.Array) -> jax.Array:
+        """Ansatz u for P stacked parameter sets: (B, in_dim) → (P, B)."""
         x, t = xt[..., :-1], xt[..., -1]
-        l1 = jnp.sum(jnp.abs(x), axis=-1)                             # (B,)
-        u = jnp.empty_like(f)
-        D = cfg.space_dim
-        base = (1.0 - t) * f[0] + l1
-        rows = [base[None]]
-        for sgn, off in ((1.0, 1), (-1.0, 1 + Din)):
-            # spatial coords: ‖x ± h e_i‖₁ = ‖x‖₁ ± sgn(x_i)·h (inside domain)
-            lx = l1[None, :] + sgn * h * jnp.sign(x).T                # (D,B)
-            ux = (1.0 - t)[None, :] * f[off:off + D] + lx
-            # temporal coord: t ± h
-            ut = (1.0 - (t + sgn * h))[None, :] * f[off + D:off + D + 1] \
-                + l1[None, :]
-            rows.append(jnp.concatenate([ux, ut], axis=0))
-        return jnp.concatenate(rows, axis=0)                          # (2D+3… )
+        return (1.0 - t) * self.f_stacked(stacked, xt) \
+            + jnp.sum(jnp.abs(x), axis=-1)
 
 
 # ---------------------------------------------------------------------- loss
+
+def _residual_from_estimate(est: stein.DerivativeEstimate,
+                            space_dim: int) -> jax.Array:
+    """Paper Eq. 7 residual loss — the single home of the PDE formula:
+    residual = u_t + Δ_x u − 0.05 ‖∇_x u‖² + 2."""
+    u_t = est.grad[:, space_dim]
+    grad_x = est.grad[:, :space_dim]
+    lap = jnp.sum(est.hess_diag[:, :space_dim], axis=-1)
+    resid = u_t + lap - 0.05 * jnp.sum(grad_x * grad_x, axis=-1) + 2.0
+    return jnp.mean(resid * resid)
+
+
+def _loss_from_u_stencil(vals: jax.Array, h: float, space_dim: int) -> jax.Array:
+    """HJB residual loss from u-values at the central-difference stencil
+    [x, x+h·e_1, ..., x−h·e_Din]: vals (2·Din+1, B) → scalar."""
+    Din = (vals.shape[0] - 1) // 2
+    u0, up, um = vals[0], vals[1:Din + 1], vals[Din + 1:]
+    est = stein.DerivativeEstimate(
+        u=u0, grad=((up - um) / (2.0 * h)).T,
+        hess_diag=((up - 2.0 * u0[None] + um) / (h * h)).T)
+    return _residual_from_estimate(est, space_dim)
+
+
+def _fd_stencil_points(xt: jax.Array, h: float) -> jax.Array:
+    """(2D+1, B, D) perturbed collocation batch of ``stein.fd_estimate``."""
+    B, D = xt.shape
+    eye = jnp.eye(D, dtype=xt.dtype) * jnp.asarray(h, dtype=xt.dtype)
+    plus = xt[None, :, :] + eye[:, None, :]
+    minus = xt[None, :, :] - eye[:, None, :]
+    return jnp.concatenate([xt[None], plus, minus], axis=0)
+
 
 def hjb_residual_loss(model: HJBPinn, params: dict, xt: jax.Array,
                       noise: dict | None = None,
@@ -269,31 +479,54 @@ def hjb_residual_loss(model: HJBPinn, params: dict, xt: jax.Array,
     """BP-free PDE residual loss (paper Eq. 4 restricted to L_r).
 
     residual = u_t + Δ_x u − 0.05 ‖∇_x u‖² + 2, derivatives estimated by
-    inference-only FD or Stein (cfg.deriv).
+    inference-only FD or Stein (cfg.deriv).  TONN densification is hoisted
+    here: ONE mesh→core pass per loss evaluation, shared by every stencil
+    inference (DESIGN.md §Perf).
     """
     cfg = model.cfg
+    params, noise = model.prepare_params(params, noise)
     f = lambda pts: model.u(params, pts, noise)
     if cfg.deriv == "fd_fast":
         # incremental rank-1 FD forward: layer 1 computed once (§Perf cell 3)
-        B, D = xt.shape
-        h = cfg.fd_step
-        vals = model.fd_u_stencil(params, xt, h, noise)
-        u0, up, um = vals[0], vals[1:D + 1], vals[D + 1:]
-        est = stein.DerivativeEstimate(
-            u=u0, grad=((up - um) / (2.0 * h)).T,
-            hess_diag=((up - 2.0 * u0[None] + um) / (h * h)).T)
-    elif cfg.deriv == "fd":
+        vals = model.fd_u_stencil(params, xt, cfg.fd_step, noise)
+        return _loss_from_u_stencil(vals, cfg.fd_step, cfg.space_dim)
+    if cfg.deriv == "fd":
         est = stein.fd_estimate(f, xt, h=cfg.fd_step)
     else:
         assert key is not None, "stein estimator needs a PRNG key"
         est = stein.stein_estimate(f, xt, key, sigma=cfg.stein_sigma,
                                    num_samples=cfg.stein_samples)
-    D = cfg.space_dim
-    u_t = est.grad[:, D]
-    grad_x = est.grad[:, :D]
-    lap = jnp.sum(est.hess_diag[:, :D], axis=-1)
-    resid = u_t + lap - 0.05 * jnp.sum(grad_x * grad_x, axis=-1) + 2.0
-    return jnp.mean(resid * resid)
+    return _residual_from_estimate(est, cfg.space_dim)
+
+
+def hjb_residual_losses_stacked(model: HJBPinn, stacked_params: dict,
+                                xt: jax.Array, noise: dict | None = None,
+                                key: jax.Array | None = None) -> jax.Array:
+    """The ZO hot path: residual losses of P stacked parameter sets (leading
+    axis on every leaf) over ONE shared collocation batch → (P,) losses.
+
+    For tt/tonn/dense with FD derivatives this runs as a small number of
+    batched programs (densify-once, stacked TT contraction via
+    ``tt_linear_batched``, one shared stencil) instead of P independent
+    forwards.  Other mode/estimator combinations fall back to a vmap of the
+    scalar loss — correct everywhere, fused where it matters.
+    """
+    cfg = model.cfg
+    if cfg.mode not in ("dense", "tt", "tonn") or \
+            cfg.deriv not in ("fd", "fd_fast"):
+        return jax.vmap(
+            lambda p: hjb_residual_loss(model, p, xt, noise, key)
+        )(stacked_params)
+    prepared = model.prepare_params_stacked(stacked_params, noise)
+    h = cfg.fd_step
+    if cfg.deriv == "fd_fast":
+        vals = model.fd_u_stencil_stacked(prepared, xt, h)   # (P, 2D+1, B)
+    else:
+        B, D = xt.shape
+        pts = _fd_stencil_points(xt, h)
+        vals = model.u_stacked(prepared, pts.reshape(-1, D))
+        vals = vals.reshape(vals.shape[0], 2 * D + 1, B)
+    return jax.vmap(lambda v: _loss_from_u_stencil(v, h, cfg.space_dim))(vals)
 
 
 def validation_mse(model: HJBPinn, params: dict, xt: jax.Array,

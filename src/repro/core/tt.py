@@ -38,6 +38,7 @@ __all__ = [
     "TTSpec",
     "auto_factorize",
     "tt_matvec",
+    "tt_matvec_stacked",
     "tt_to_full",
     "tt_svd",
     "tt_init",
@@ -201,6 +202,25 @@ def tt_matvec(cores: Sequence[jax.Array], x: jax.Array, spec: TTSpec,
         m_prefix *= m_k
     y = a.reshape(B, spec.out_dim)
     return y.reshape(*batch_shape, spec.out_dim)
+
+
+def tt_matvec_stacked(cores: Sequence[jax.Array], x: jax.Array, spec: TTSpec,
+                      precision=None) -> jax.Array:
+    """``tt_matvec`` over a leading stack axis P on the cores (the unfused
+    oracle for ``repro.kernels.tt_contract.tt_contract_batched``).
+
+    cores: each ``(P, r, m, n, r')``.  x: ``(B, N)`` shared across the stack
+    or ``(P, B, N)`` per-stack-entry.  Returns ``(P, B, M)``.
+
+    Deliberately a vmap of ``tt_matvec`` — the per-entry computation graph
+    is identical to the sequential chain, so stacked and serial ZO sweeps
+    agree bitwise (the FD residual squares second differences, amplifying
+    any f32 reassociation by 1/h²; see DESIGN.md §Perf).  The *fast* CPU
+    hidden-layer path is the Kronecker head in ``HJBPinn._f_head_stacked``.
+    """
+    x_axis = 0 if x.ndim == 3 else None
+    return jax.vmap(lambda c, xx: tt_matvec(c, xx, spec, precision),
+                    in_axes=(0, x_axis))(list(cores), x)
 
 
 def tt_to_full(cores: Sequence[jax.Array], spec: TTSpec) -> jax.Array:

@@ -15,6 +15,19 @@ an arbitrary callable ``loss_fn(params) -> scalar`` — only forward
 evaluations are ever taken (no jax.grad anywhere in this module), which is
 the whole point: on a photonic chip only inference exists.
 
+Fused hot path (DESIGN.md §Perf): the N perturbations ξ_i are materialized
+ONCE as a stacked pytree (``sample_perturbations``) and the N+1 losses —
+base included — are evaluated by a single batched program when the caller
+supplies ``batched_loss_fn: stacked_params -> (P,) losses`` (e.g.
+``pinn.hjb_residual_losses_stacked``, which lowers to the stacked
+TT-contraction kernel) or sets ``SPSAConfig.vectorized`` (generic vmap).
+The gradient reconstruction then reuses the same ξ stack as one tensordot
+instead of regenerating every perturbation a second time through a
+``lax.scan`` — halving RNG + perturbation work per step.  The sequential
+path remains selectable (``vectorized=False``, no ``batched_loss_fn``) for
+photonic-realism simulation: a real chip has ONE mesh and must run the N
+inferences serially.
+
 Distributed ZO (beyond-paper, DESIGN.md §2): the per-perturbation losses
 ``L(Φ + μ ξ_i)`` are embarrassingly parallel and each is a *scalar*.  With a
 shared PRNG seed every worker regenerates all ξ_i locally, evaluates its own
@@ -29,7 +42,6 @@ function (``spsa_gradient`` with ``index_shard``) and through
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -38,6 +50,7 @@ import jax.numpy as jnp
 __all__ = [
     "SPSAConfig",
     "sample_perturbation",
+    "sample_perturbations",
     "spsa_losses",
     "spsa_gradient",
     "spsa_gradient_from_losses",
@@ -54,7 +67,7 @@ class SPSAConfig:
     mu: float = 0.01          # sampling radius μ
     sign_update: bool = True  # Eq. (6) ZO-signSGD de-noising
     antithetic: bool = False  # optional variance reduction (beyond paper)
-    vectorized: bool = False  # beyond-paper: vmap the N perturbed loss evals
+    vectorized: bool = False  # beyond-paper: batch the N perturbed loss evals
     #                           (a photonic chip has ONE physical mesh and
     #                           must run them sequentially; a TPU can batch
     #                           them — see EXPERIMENTS.md §Perf cell 3)
@@ -69,38 +82,76 @@ def sample_perturbation(key: jax.Array, params: PyTree) -> PyTree:
     return jax.tree.unflatten(treedef, noise)
 
 
+def sample_perturbations(key: jax.Array, params: PyTree, n: int) -> PyTree:
+    """All N perturbations as ONE stacked pytree (leading axis n).
+
+    Index i of the stack is bit-identical to
+    ``sample_perturbation(jax.random.split(key, n)[i], params)`` — the
+    sequential, vectorized, and sharded paths all see the same ξ_i.
+    """
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: sample_perturbation(k, params))(keys)
+
+
 def _perturb(params: PyTree, xi: PyTree, mu) -> PyTree:
     return jax.tree.map(lambda p, z: p + mu * z, params, xi)
 
 
+def _stack_slice(xis: PyTree, lo: int, hi: int) -> PyTree:
+    return jax.tree.map(lambda z: z[lo:hi], xis)
+
+
 def spsa_losses(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
                 key: jax.Array, cfg: SPSAConfig,
-                index_shard: tuple | None = None) -> jax.Array:
+                index_shard: tuple | None = None,
+                xis: PyTree | None = None,
+                batched_loss_fn: Callable[[PyTree], jax.Array] | None = None,
+                ) -> jax.Array:
     """Evaluate the N perturbed losses L(Φ + μ ξ_i).
 
     ``index_shard=(lo, hi)`` evaluates only i ∈ [lo, hi) (its worker's slice)
     and returns an N-vector with zeros elsewhere — ready for a cross-worker
     ``psum`` (distributed ZO; each worker must use the SAME ``key``).
+
+    ``xis`` — optional pre-materialized perturbation stack from
+    ``sample_perturbations(key, params, N)``; avoids regenerating ξ here.
+    ``batched_loss_fn`` — optional fused evaluator mapping a stacked params
+    pytree (leading axis P) to (P,) losses in one program.  With it (or
+    ``cfg.vectorized``) the local slice of perturbations is evaluated
+    batched and scattered into the N-vector, composing with sharding.
     """
     n = cfg.num_samples
+    batched = batched_loss_fn is not None or cfg.vectorized
+    lo, hi = index_shard if index_shard is not None else (0, n)
+
+    if batched:
+        if xis is None:
+            xis = sample_perturbations(key, params, n)
+        eval_fn = batched_loss_fn or jax.vmap(loss_fn)
+        local = _stack_slice(xis, lo, hi)
+        lp = eval_fn(_perturb(params, local, cfg.mu))
+        if cfg.antithetic:
+            lm = eval_fn(_perturb(params, local, -cfg.mu))
+            vals = 0.5 * (lp - lm)
+        else:
+            vals = lp
+        return jnp.zeros((n,), jnp.float32).at[lo:hi].set(
+            vals.astype(jnp.float32))
+
     keys = jax.random.split(key, n)
 
     def one(i, k):
-        xi = sample_perturbation(k, params)
+        xi = (sample_perturbation(k, params) if xis is None
+              else jax.tree.map(lambda z: z[i], xis))
         lp = loss_fn(_perturb(params, xi, cfg.mu))
         if cfg.antithetic:
             lm = loss_fn(_perturb(params, xi, -cfg.mu))
             return 0.5 * (lp - lm)  # central estimate folded into "loss delta"
         return lp
 
-    if cfg.vectorized and index_shard is None:
-        # all N perturbed models evaluated as ONE batched program (TPU-only
-        # optimization: the photonic chip's single mesh is inherently serial)
-        return jax.vmap(one)(jnp.arange(n), keys).astype(jnp.float32)
-
     losses = []
     for i in range(n):
-        if index_shard is not None and not (index_shard[0] <= i < index_shard[1]):
+        if not (lo <= i < hi):
             losses.append(jnp.zeros((), dtype=jnp.float32))
         else:
             losses.append(one(i, keys[i]).astype(jnp.float32))
@@ -110,25 +161,34 @@ def spsa_losses(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
 def spsa_gradient_from_losses(params: PyTree, key: jax.Array,
                               perturbed_losses: jax.Array,
                               base_loss: jax.Array,
-                              cfg: SPSAConfig) -> PyTree:
+                              cfg: SPSAConfig,
+                              xis: PyTree | None = None) -> PyTree:
     """Reconstruct Eq. (5) from the (possibly psum-merged) loss vector.
 
-    Regenerates every ξ_i from ``key`` — deterministic given the shared seed,
-    so all workers materialize identical gradients with no tensor traffic.
+    With ``xis`` (the stacked perturbations already materialized by the
+    fused path) the gradient is one tensordot per leaf.  Without it, every
+    ξ_i is regenerated from ``key`` via ``lax.scan`` — deterministic given
+    the shared seed, so all workers materialize identical gradients with no
+    tensor traffic and no N× parameter memory.
     """
     n = cfg.num_samples
-    keys = jax.random.split(key, n)
     if cfg.antithetic:
         # spsa_losses already returned (L+ − L−)/2; base term cancels
         deltas = perturbed_losses
     else:
         deltas = perturbed_losses - base_loss
+    coefs = deltas / (n * cfg.mu)                     # (n,)
+
+    if xis is not None:
+        return jax.tree.map(
+            lambda z: jnp.tensordot(coefs.astype(z.dtype), z, axes=1), xis)
+
+    keys = jax.random.split(key, n)
 
     def accum(grad, ik):
         i, k = ik
         xi = sample_perturbation(k, params)
-        coef = deltas[i] / (n * cfg.mu)
-        return jax.tree.map(lambda g, z: g + coef * z, grad, xi), None
+        return jax.tree.map(lambda g, z: g + coefs[i] * z, grad, xi), None
 
     zero = jax.tree.map(jnp.zeros_like, params)
     idx = jnp.arange(n)
@@ -140,18 +200,51 @@ def spsa_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
                   key: jax.Array, cfg: SPSAConfig,
                   base_loss: jax.Array | None = None,
                   axis_name: str | None = None,
-                  index_shard: tuple | None = None) -> tuple:
+                  index_shard: tuple | None = None,
+                  batched_loss_fn: Callable[[PyTree], jax.Array] | None = None,
+                  ) -> tuple:
     """Full Eq. (5): returns (grad, base_loss).
 
     With ``axis_name`` + ``index_shard`` set, runs the distributed-ZO
     protocol: local slice of perturbed losses → psum → identical grads.
+
+    With ``batched_loss_fn`` (or ``cfg.vectorized``) and no shard, the base
+    loss rides along as perturbation 0 of the stacked evaluation, so one
+    ZO-signSGD step is a SINGLE fused program over N+1 models instead of
+    N+1 sequential forwards.
     """
-    if base_loss is None:
-        base_loss = loss_fn(params)
-    losses = spsa_losses(loss_fn, params, key, cfg, index_shard=index_shard)
+    n = cfg.num_samples
+    batched = batched_loss_fn is not None or cfg.vectorized
+    xis = sample_perturbations(key, params, n) if batched else None
+
+    if batched and index_shard is None and base_loss is None:
+        # fold the base evaluation in as a zero perturbation: ONE launch for
+        # all N+1 (or 2N+1 antithetic) models
+        eval_fn = batched_loss_fn or jax.vmap(loss_fn)
+        zero = jax.tree.map(lambda z: jnp.zeros_like(z[:1]), xis)
+        if cfg.antithetic:
+            aug = jax.tree.map(
+                lambda z0, z: jnp.concatenate([z0, z, -z]), zero, xis)
+            all_l = eval_fn(_perturb(params, aug, cfg.mu))
+            base_loss = all_l[0]
+            losses = (0.5 * (all_l[1:n + 1] - all_l[n + 1:])
+                      ).astype(jnp.float32)
+        else:
+            aug = jax.tree.map(
+                lambda z0, z: jnp.concatenate([z0, z]), zero, xis)
+            all_l = eval_fn(_perturb(params, aug, cfg.mu))
+            base_loss = all_l[0]
+            losses = all_l[1:].astype(jnp.float32)
+    else:
+        if base_loss is None:
+            base_loss = loss_fn(params)
+        losses = spsa_losses(loss_fn, params, key, cfg,
+                             index_shard=index_shard, xis=xis,
+                             batched_loss_fn=batched_loss_fn)
     if axis_name is not None:
         losses = jax.lax.psum(losses, axis_name)
-    grad = spsa_gradient_from_losses(params, key, losses, base_loss, cfg)
+    grad = spsa_gradient_from_losses(params, key, losses, base_loss, cfg,
+                                     xis=xis)
     return grad, base_loss
 
 
@@ -169,11 +262,14 @@ class ZOState:
 def zo_signsgd_step(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
                     state: ZOState, lr: float, cfg: SPSAConfig,
                     axis_name: str | None = None,
-                    index_shard: tuple | None = None) -> tuple:
+                    index_shard: tuple | None = None,
+                    batched_loss_fn: Callable[[PyTree], jax.Array] | None = None,
+                    ) -> tuple:
     """One Eq. (6) update: Φ ← Φ − α · sign(∇̂L).  Returns (params, state, loss)."""
     key, sub = jax.random.split(state.key)
     grad, base = spsa_gradient(loss_fn, params, sub, cfg,
-                               axis_name=axis_name, index_shard=index_shard)
+                               axis_name=axis_name, index_shard=index_shard,
+                               batched_loss_fn=batched_loss_fn)
     if cfg.sign_update:
         upd = jax.tree.map(lambda g: jnp.sign(g), grad)
     else:

@@ -23,7 +23,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import tt_contract as _ttc
 
-__all__ = ["kernel_mode", "tt_linear", "attention"]
+__all__ = ["kernel_mode", "tt_linear", "tt_linear_batched", "attention"]
 
 
 def kernel_mode() -> str:
@@ -40,6 +40,20 @@ def tt_linear(x: jax.Array, cores: Sequence[jax.Array], spec: tt_lib.TTSpec,
         return _ref.tt_contract_ref(x, cores, spec)
     return _ttc.tt_contract(x, tuple(cores), spec,
                             interpret=(mode == "interpret"))
+
+
+def tt_linear_batched(x: jax.Array, cores: Sequence[jax.Array],
+                      spec: tt_lib.TTSpec,
+                      mode: str | None = None) -> jax.Array:
+    """P stacked TT-linears in one program — the ZO multi-perturbation path.
+
+    cores: each ``(P, r, m, n, r')``; x ``(B, N)`` shared or ``(P, B, N)``.
+    """
+    mode = mode or kernel_mode()
+    if mode == "ref":
+        return _ref.tt_contract_batched_ref(x, cores, spec)
+    return _ttc.tt_contract_batched(x, tuple(cores), spec,
+                                    interpret=(mode == "interpret"))
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array,

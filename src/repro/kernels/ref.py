@@ -15,13 +15,20 @@ import numpy as np
 
 from repro.core import tt as tt_lib
 
-__all__ = ["tt_contract_ref", "attention_ref"]
+__all__ = ["tt_contract_ref", "tt_contract_batched_ref", "attention_ref"]
 
 
 def tt_contract_ref(x: jax.Array, cores: Sequence[jax.Array],
                     spec: tt_lib.TTSpec) -> jax.Array:
     """y = x @ W(cores)^T via the chain contraction (never densifies W)."""
     return tt_lib.tt_matvec(cores, x, spec)
+
+
+def tt_contract_batched_ref(x: jax.Array, cores: Sequence[jax.Array],
+                            spec: tt_lib.TTSpec) -> jax.Array:
+    """Oracle for the multi-perturbation kernel: vmap of the chain over the
+    leading core-stack axis (x shared ``(B,N)`` or stacked ``(P,B,N)``)."""
+    return tt_lib.tt_matvec_stacked(cores, x, spec)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -16,6 +16,14 @@ practical specs); the batch-tile dim ``bt`` is the MXU-aligned (≥128) axis.
 
 VMEM budget: bt·(N + M + max intermediate)·4B; choose bt so this stays ≲8 MB
 (``default_batch_tile``).
+
+``tt_contract_batched`` extends the grid with a leading *perturbation* axis
+``P``: each core carries P stacked variants (one per SPSA sample) and the
+grid is ``(P, batch-tiles)``, so an entire ZO loss sweep — all N perturbed
+models — executes as ONE kernel launch instead of N sequential unfused
+chains (DESIGN.md §Perf).  The input may be shared across P (its BlockSpec
+index map simply ignores the p coordinate — zero extra HBM traffic) or carry
+its own P axis (layer ≥ 2, where activations differ per perturbation).
 """
 
 from __future__ import annotations
@@ -30,7 +38,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import tt as tt_lib
 
-__all__ = ["tt_contract", "default_batch_tile"]
+__all__ = ["tt_contract", "tt_contract_batched", "default_batch_tile"]
 
 
 def _chain(x_tile: jax.Array, cores: Sequence[jax.Array],
@@ -111,3 +119,72 @@ def tt_contract(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
         interpret=interpret,
     )(xf, *cores)
     return y[:B].reshape(*batch_shape, spec.out_dim)
+
+
+def _batched_kernel(spec: tt_lib.TTSpec, n_cores: int, shared_x: bool, *refs):
+    x_ref = refs[0]
+    core_refs = refs[1:1 + n_cores]
+    o_ref = refs[1 + n_cores]
+    xt = x_ref[...]
+    if not shared_x:                       # (1, bt, N) block → (bt, N)
+        xt = xt.reshape(xt.shape[-2], xt.shape[-1])
+    cores = [c[...].reshape(spec.core_shapes[k])
+             for k, c in enumerate(core_refs)]
+    y = _chain(xt.astype(jnp.float32), cores, spec)
+    o_ref[...] = y.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "batch_tile", "interpret"))
+def tt_contract_batched(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
+                        batch_tile: int | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """``y[p] = x[p] @ W(cores[p])^T`` for P stacked core-sets, one launch.
+
+    cores: tuple of ``(P, r, m, n, r')`` arrays — one TT-core stack per chain
+    position, leading axis = SPSA perturbation index.
+    x: ``(B, N)`` shared across all P (e.g. the collocation stencil feeding
+    layer 1 of every perturbed model) or ``(P, B, N)`` per-perturbation
+    activations.  Returns ``(P, B, M)``.
+
+    Grid ``(P, B/bt)``; each program holds ONE perturbation's (tiny) cores
+    plus one batch tile in VMEM, so HBM traffic for the shared-x case is
+    ``B·N + P·(B·M + Σ|G_k|)`` — the input is read once per (p, tile), never
+    duplicated P× in HBM.
+    """
+    if not cores:
+        raise ValueError("need at least one core stack")
+    P = cores[0].shape[0]
+    shared_x = x.ndim == 2
+    if not shared_x and x.shape[0] != P:
+        raise ValueError(f"x leading axis {x.shape[0]} != core stack P={P}")
+    B = x.shape[-2]
+    bt = batch_tile or default_batch_tile(spec)
+    bt = min(bt, B)
+    Bp = ((B + bt - 1) // bt) * bt
+    if Bp != B:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, Bp - B), (0, 0)]
+        x = jnp.pad(x, pad)
+    # flatten each core stack to (P, |G_k|): rank-2 blocks lower on TPU
+    # regardless of chain length; the kernel reshapes back per-program
+    flat = [c.reshape(P, -1) for c in cores]
+
+    grid = (P, Bp // bt)
+    if shared_x:
+        in_specs = [pl.BlockSpec((bt, spec.in_dim), lambda p, i: (i, 0))]
+    else:
+        in_specs = [pl.BlockSpec((1, bt, spec.in_dim), lambda p, i: (p, i, 0))]
+    for shape in spec.core_shapes:
+        size = int(np.prod(shape))
+        in_specs.append(
+            pl.BlockSpec((1, size), lambda p, i: (p, 0)))
+    out_spec = pl.BlockSpec((1, bt, spec.out_dim), lambda p, i: (p, i, 0))
+
+    y = pl.pallas_call(
+        functools.partial(_batched_kernel, spec, spec.L, shared_x),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((P, Bp, spec.out_dim), x.dtype),
+        interpret=interpret,
+    )(x, *flat)
+    return y[:, :B]

@@ -68,6 +68,9 @@ def main(argv=None):
     ap.add_argument("--async-ckpt", action="store_true")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--zo-vectorized", action="store_true",
+                    help="batch the N SPSA loss evals in one program "
+                         "(TPU/CPU fast path; a photonic chip is serial)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
@@ -117,12 +120,15 @@ def main(argv=None):
                 except FileNotFoundError:
                     pass
 
-            @jax.jit
+            # fully jitted step with donated params+key: the update buffers
+            # are reused in place instead of a fresh N×param allocation/step
+            @partial(jax.jit, donate_argnums=(0, 1))
             def zo_step(params, key, batch):
                 lf = lambda p: api.loss_fn(p, cfg, batch)
                 key, sub = jax.random.split(key)
                 new_params, loss = zo_signsgd_trainer_step(
-                    lf, params, sub, lr=args.lr or 1e-3)
+                    lf, params, sub, lr=args.lr or 1e-3,
+                    vectorized=args.zo_vectorized)
                 return new_params, key, loss
 
             for step in range(start_step, args.steps):
@@ -148,7 +154,8 @@ def main(argv=None):
                     print(f"[resume] step {start_step}")
                 except FileNotFoundError:
                     pass
-            step_fn = jax.jit(build_train_step(cfg, opt, args.compress_grads))
+            step_fn = jax.jit(build_train_step(cfg, opt, args.compress_grads),
+                              donate_argnums=(0, 1))
             for step in range(start_step, args.steps):
                 batch = synthetic_lm_batch(data_cfg, step)
                 watchdog.start_step()

@@ -26,15 +26,26 @@ def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],
                             num_samples: int = 10, mu: float = 1e-2,
                             axis_name: str | None = None,
                             worker_index: int = 0,
-                            num_workers: int = 1) -> tuple:
-    """One BP-free update. Returns (new_params, loss)."""
-    cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu)
+                            num_workers: int = 1,
+                            vectorized: bool = False,
+                            batched_loss_fn: Callable[[PyTree], jax.Array]
+                            | None = None) -> tuple:
+    """One BP-free update. Returns (new_params, loss).
+
+    ``vectorized`` batches the N perturbed loss evaluations (generic vmap);
+    ``batched_loss_fn`` supplies a fused stacked-params evaluator (e.g. the
+    PINN's ``hjb_residual_losses_stacked`` → one stacked TT-kernel launch
+    for all perturbations).  Both compose with sharding.
+    """
+    cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu,
+                         vectorized=vectorized)
     shard = None
     if num_workers > 1:
         per = -(-num_samples // num_workers)
         shard = (worker_index * per, min(num_samples, (worker_index + 1) * per))
     grad, base = zoo.spsa_gradient(loss_fn, params, key, cfg,
-                                   axis_name=axis_name, index_shard=shard)
+                                   axis_name=axis_name, index_shard=shard,
+                                   batched_loss_fn=batched_loss_fn)
     new_params = jax.tree.map(
         lambda p, g: p - lr * jnp.sign(g).astype(p.dtype), params, grad)
     return new_params, base

@@ -1,11 +1,11 @@
-"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
-swept over shapes and dtypes, plus hypothesis property tests."""
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, swept
+over shapes and dtypes.  Hypothesis property tests live in
+tests/test_properties.py behind ``pytest.importorskip``."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import tt
 from repro.kernels import ops, ref
@@ -49,24 +49,49 @@ def test_tt_contract_batch_dims():
                                rtol=1e-6, atol=1e-6)
 
 
-@settings(deadline=None, max_examples=20)
-@given(
-    out_dim=st.sampled_from([16, 32, 64, 96]),
-    in_dim=st.sampled_from([16, 32, 64, 96]),
-    L=st.integers(2, 4),
-    rank=st.sampled_from([1, 2, 4]),
-    batch=st.integers(1, 40),
-)
-def test_tt_contract_property(out_dim, in_dim, L, rank, batch):
-    """Property: kernel == (x @ densified(W).T) for arbitrary specs."""
+# ------------------------------------------------- tt_contract_batched (ZO)
+
+BATCHED_CASES = [
+    # (out, in, L, rank, P, batch)
+    (64, 64, 2, 2, 4, 16),
+    (1024, 1024, 4, 2, 10, 32),  # the paper's TONN layer, N=10 SPSA samples
+    (96, 48, 3, 4, 3, 33),       # unaligned batch
+]
+
+
+@pytest.mark.parametrize("out_dim,in_dim,L,rank,P,batch", BATCHED_CASES)
+@pytest.mark.parametrize("shared_x", [True, False])
+def test_tt_contract_batched_matches_stacked_matvec(out_dim, in_dim, L, rank,
+                                                    P, batch, shared_x):
+    """One launch over the (P, batch-tile) grid == P independent unfused
+    chains, for both a shared input and per-perturbation activations."""
+    from repro.kernels import tt_contract as ttc
     spec = tt.auto_factorize(out_dim, in_dim, L=L, max_rank=rank)
-    cores = tt.tt_init(jax.random.PRNGKey(42), spec)
-    x = jax.random.normal(jax.random.PRNGKey(7), (batch, in_dim))
-    w = tt.tt_to_full(cores, spec)
-    y_dense = x @ w.T
-    y_k = ops.tt_linear(x, cores, spec, mode="interpret")
-    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_dense),
-                               atol=1e-4, rtol=1e-4)
+    keys = jax.random.split(jax.random.PRNGKey(0), P)
+    stacks = tuple(
+        jnp.stack([tt.tt_init(k, spec)[i] for k in keys])
+        for i in range(spec.L))
+    shape = (batch, in_dim) if shared_x else (P, batch, in_dim)
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    y_k = ttc.tt_contract_batched(x, stacks, spec, interpret=True)
+    assert y_k.shape == (P, batch, out_dim)
+    y_loop = jnp.stack([
+        tt.tt_matvec([s[p] for s in stacks],
+                     x if shared_x else x[p], spec)
+        for p in range(P)])
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_loop),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_tt_linear_batched_dispatch_ref_equals_interpret():
+    spec = tt.auto_factorize(32, 32, L=2, max_rank=4)
+    stacks = [jnp.stack([c, 2.0 * c])
+              for c in tt.tt_init(jax.random.PRNGKey(0), spec)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, 32))
+    y_ref = ops.tt_linear_batched(x, stacks, spec, mode="ref")
+    y_int = ops.tt_linear_batched(x, stacks, spec, mode="interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_int),
+                               atol=1e-5, rtol=1e-5)
 
 
 # ------------------------------------------------------------ flash attention
@@ -108,26 +133,6 @@ def test_flash_attention_block_size_invariance():
     o1 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
     o2 = flash_attention(q, k, v, block_q=128, block_k=32, interpret=True)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
-
-
-@settings(deadline=None, max_examples=15)
-@given(
-    h=st.sampled_from([2, 4, 8]),
-    kh_div=st.sampled_from([1, 2]),
-    s=st.integers(16, 160),
-    d=st.sampled_from([16, 32]),
-    causal=st.booleans(),
-)
-def test_flash_attention_property(h, kh_div, s, d, causal):
-    kh = max(1, h // kh_div)
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
-    q = jax.random.normal(ks[0], (1, h, s, d))
-    k = jax.random.normal(ks[1], (1, kh, s, d))
-    v = jax.random.normal(ks[2], (1, kh, s, d))
-    o_ref = ref.attention_ref(q, k, v, causal=causal)
-    o_k = ops.attention(q, k, v, causal=causal, mode="interpret")
-    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
-                               atol=5e-5, rtol=5e-5)
 
 
 def test_attention_rows_are_convex_combinations():

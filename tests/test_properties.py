@@ -1,0 +1,104 @@
+"""Hypothesis property tests for TT algebra, photonic meshes, and the
+Pallas kernels.
+
+Kept in their own module behind ``pytest.importorskip`` so environments
+without ``hypothesis`` (it is an optional [test] dependency, see
+pyproject.toml) still collect and run the deterministic suites."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import photonic, tt  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(6, 4096))
+def test_balanced_factorization_property(n):
+    f = tt._balanced_factorization(n, 3)
+    assert int(np.prod(f)) == n
+    assert all(x >= 1 for x in f)
+
+
+@settings(deadline=None, max_examples=10)
+@given(p=st.integers(2, 24))
+def test_decompose_reconstruct_orthogonal(p):
+    rs = np.random.RandomState(p)
+    q, _ = np.linalg.qr(rs.randn(p, p))
+    lay, ph, d = photonic.decompose_orthogonal(q)
+    u = photonic.mesh_matrix(lay, ph, d)
+    np.testing.assert_allclose(np.asarray(u), q, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    out_dim=st.sampled_from([16, 32, 64, 96]),
+    in_dim=st.sampled_from([16, 32, 64, 96]),
+    L=st.integers(2, 4),
+    rank=st.sampled_from([1, 2, 4]),
+    batch=st.integers(1, 40),
+)
+def test_tt_contract_property(out_dim, in_dim, L, rank, batch):
+    """Property: kernel == (x @ densified(W).T) for arbitrary specs."""
+    spec = tt.auto_factorize(out_dim, in_dim, L=L, max_rank=rank)
+    cores = tt.tt_init(jax.random.PRNGKey(42), spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (batch, in_dim))
+    w = tt.tt_to_full(cores, spec)
+    y_dense = x @ w.T
+    y_k = ops.tt_linear(x, cores, spec, mode="interpret")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    out_dim=st.sampled_from([16, 48, 64]),
+    in_dim=st.sampled_from([16, 32, 96]),
+    L=st.integers(2, 3),
+    rank=st.sampled_from([1, 2, 4]),
+    P=st.integers(1, 6),
+    batch=st.integers(1, 24),
+    shared_x=st.booleans(),
+)
+def test_tt_contract_batched_property(out_dim, in_dim, L, rank, P, batch,
+                                      shared_x):
+    """Property: the multi-perturbation kernel == P unfused chains for
+    arbitrary specs, stack sizes, and shared/per-P inputs."""
+    from repro.kernels import tt_contract as ttc
+    spec = tt.auto_factorize(out_dim, in_dim, L=L, max_rank=rank)
+    keys = jax.random.split(jax.random.PRNGKey(3), P)
+    stacks = tuple(jnp.stack([tt.tt_init(k, spec)[i] for k in keys])
+                   for i in range(spec.L))
+    shape = (batch, in_dim) if shared_x else (P, batch, in_dim)
+    x = jax.random.normal(jax.random.PRNGKey(4), shape)
+    y_k = ttc.tt_contract_batched(x, stacks, spec, interpret=True)
+    y_loop = jnp.stack([
+        tt.tt_matvec([s[p] for s in stacks], x if shared_x else x[p], spec)
+        for p in range(P)])
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_loop),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    h=st.sampled_from([2, 4, 8]),
+    kh_div=st.sampled_from([1, 2]),
+    s=st.integers(16, 160),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(h, kh_div, s, d, causal):
+    kh = max(1, h // kh_div)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, h, s, d))
+    k = jax.random.normal(ks[1], (1, kh, s, d))
+    v = jax.random.normal(ks[2], (1, kh, s, d))
+    o_ref = ref.attention_ref(q, k, v, causal=causal)
+    o_k = ops.attention(q, k, v, causal=causal, mode="interpret")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               atol=5e-5, rtol=5e-5)
