@@ -1,0 +1,198 @@
+"""Multi-PDE workload suite: every registered problem through the fused
+BP-free solver stack (the generalization of ``benchmarks/table1_hjb.py`` to
+the ``repro.pde`` registry).
+
+Per problem, two checks:
+
+  * **parity** — for identical SPSA perturbations ξ, the fused stacked
+    evaluator (``pinn.residual_losses_stacked``: densify-once, stacked TT
+    contraction, shared FD stencil, Kronecker head + polynomial sine) must
+    match the sequential per-model sweep within the DESIGN.md §Perf
+    numerical contract: stencil u-values to 1e-4 relative (strict f32
+    forward tolerance), SPSA loss vectors to 1e-1 of the largest loss (the
+    1/h² FD amplification of f32 forward rounding).
+  * **train** — a short on-chip ZO-signSGD run (``table1_hjb.run_row``)
+    must end with a finite loss, and, when the problem has a closed-form
+    solution, improve validation MSE over the untrained model.
+
+Emits ``BENCH_pde_suite.json`` (archived by CI; ``--ci`` selects a
+container-sized budget) and exits non-zero on any parity failure.
+
+    PYTHONPATH=src python benchmarks/pde_suite.py --ci
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.table1_hjb import run_row
+except ImportError:  # invoked as `python benchmarks/pde_suite.py`
+    from table1_hjb import run_row
+from repro import pde as pde_lib
+from repro.core import pinn, zoo
+
+# per-problem budget overrides applied by --ci (the 100-dim problem pays
+# 201 stencil inferences per loss, so it gets a smaller batch); explicit
+# --hidden/--batch/--epochs flags always win over these.
+CI_SIZES = {
+    "black-scholes-100d": {"batch": 8, "epochs": 30},
+}
+# derived from the registry so workloads added later are covered by CI
+# automatically (CI_SIZES only overrides budgets)
+CI_PDES = pde_lib.available()
+
+
+def parity_check(pde: str, hidden: int, batch: int, num_samples: int = 6,
+                 tt_rank: int = 2, tt_L: int = 3, seed: int = 0,
+                 mode: str = "tt") -> dict:
+    """Fused stacked vs sequential evaluation for identical ξ on one
+    problem (the PR-1 parity harness, problem-parameterized).  The SINGLE
+    home of the DESIGN.md §Perf numerical contract — ``benchmarks/zo_step.py``
+    asserts through this same function."""
+    base = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=tt_rank,
+                           tt_L=tt_L, pde=pde, deriv="fd_fast")
+    fused_cfg = dataclasses.replace(base, use_fused_kernel=True)
+    fused = pinn.TensorPinn(fused_cfg)
+    check = pinn.TensorPinn(base)
+    problem = fused.problem
+
+    key = jax.random.PRNGKey(seed)
+    xt = problem.sample_collocation(jax.random.fold_in(key, 1), batch)
+    bc = (problem.boundary_batch(jax.random.fold_in(key, 3), batch)
+          if problem.has_boundary_loss else None)
+    params = check.init(key)
+    scfg = zoo.SPSAConfig(num_samples=num_samples, mu=0.01)
+    xis = zoo.sample_perturbations(jax.random.fold_in(key, 2), params,
+                                   num_samples)
+    sp = jax.tree.map(lambda p, z: p + scfg.mu * z, params, xis)
+
+    # stencil u-values: strict f32 forward tolerance (prepare is a no-op
+    # for tt/dense; tonn densifies the perturbed meshes once).  The
+    # sequential reference is jitted so its mesh->core densification
+    # compiles once and is reused across the P samples (eager per-op
+    # dispatch of the mesh scan dominates tonn wall time otherwise).
+    sp_prep = fused.prepare_params_stacked(sp, None)
+    u_fused = fused.fd_u_stencil_stacked(sp_prep, xt, fused.fd_step)
+    seq_stencil = jax.jit(lambda p: check.fd_u_stencil(p, xt, check.fd_step))
+    u_seq = jnp.stack([
+        seq_stencil(jax.tree.map(lambda z: z[i], sp))
+        for i in range(num_samples)])
+    u_rel = float(jnp.max(jnp.abs(u_fused - u_seq)
+                          / (jnp.abs(u_seq) + 1e-6)))
+
+    # SPSA loss vectors: FD-noise-floor tolerance (DESIGN.md §Perf)
+    seq_loss = jax.jit(lambda p: pinn.residual_loss(check, p, xt, bc=bc))
+    l_seq = jnp.stack([
+        seq_loss(jax.tree.map(lambda z: z[i], sp))
+        for i in range(num_samples)])
+    l_fused = pinn.residual_losses_stacked(fused, sp, xt, bc=bc)
+    loss_rel = float(jnp.max(jnp.abs(l_fused - l_seq))
+                     / (float(jnp.max(jnp.abs(l_seq))) + 1e-12))
+    return {
+        "u_max_rel_err": u_rel,
+        "loss_max_rel_err": loss_rel,
+        "losses_agree": bool(u_rel < 1e-4 and loss_rel < 1e-1),
+    }
+
+
+def run_problem(pde: str, hidden: int, batch: int, epochs: int,
+                num_samples: int = 6, seed: int = 0) -> dict:
+    t0 = time.time()
+    # both solver parametrizations through the contract: tt (digital TT
+    # baseline) and tonn (the paper's mesh-per-core hardware, exercising
+    # the vmapped prepare_params_stacked densification per problem)
+    parity = {mode: parity_check(pde, hidden=hidden, batch=batch,
+                                 num_samples=num_samples, seed=seed,
+                                 mode=mode)
+              for mode in ("tt", "tonn")}
+    row = run_row("tt", on_chip=True, noise=False, hidden=hidden,
+                  epochs=epochs, batch=batch, seed=seed, pde=pde)
+    problem = pde_lib.get_problem(pde)
+    out = {
+        "pde": pde,
+        "in_dim": problem.in_dim,
+        "has_boundary_loss": problem.has_boundary_loss,
+        "has_exact_solution": problem.has_exact_solution,
+        "parity": parity,
+        "final_loss": row["final_loss"],
+        "val_mse": row["val_mse_ideal"],
+        "params": row["params"],
+        "seconds": round(time.time() - t0, 1),
+    }
+    return out
+
+
+def run(pdes=CI_PDES, hidden: int = 32, batch: int = 16, epochs: int = 60,
+        num_samples: int = 6, ci: bool = False,
+        explicit: frozenset = frozenset()) -> dict:
+    """``ci`` applies the per-problem CI_SIZES budget overrides — except to
+    knobs named in ``explicit`` (flags the caller set by hand)."""
+    rows = []
+    for pde in pdes:
+        budget = {"hidden": hidden, "batch": batch, "epochs": epochs}
+        if ci:
+            budget.update({k: v for k, v in CI_SIZES.get(pde, {}).items()
+                           if k not in explicit})
+        rows.append(run_problem(pde, num_samples=num_samples, **budget))
+    return {
+        "config": {"ci": ci, "hidden": hidden, "batch": batch,
+                   "epochs": epochs, "num_samples": num_samples,
+                   "backend": jax.default_backend(),
+                   "pdes": list(pdes)},
+        "rows": rows,
+    }
+
+
+def summarize(result: dict) -> list:
+    """Rows for benchmarks/run.py's CSV."""
+    out = []
+    for r in result["rows"]:
+        worst = max(p["loss_max_rel_err"] for p in r["parity"].values())
+        out.append({
+            "name": f"pde_suite/{r['pde']}",
+            "us_per_call": "",
+            "derived": (f"loss={r['final_loss']:.3e}, "
+                        f"val_mse={r['val_mse']:.3e}, "
+                        f"parity_loss_err={worst:.1e}"),
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="container-sized budgets + the default PDE list")
+    ap.add_argument("--pdes", default=",".join(CI_PDES),
+                    help="comma-separated registry names")
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--epochs", type=int, default=60)
+    ap.add_argument("--num-samples", type=int, default=6)
+    ap.add_argument("--out", default="BENCH_pde_suite.json")
+    args = ap.parse_args()
+
+    explicit = frozenset(k for k in ("hidden", "batch", "epochs")
+                         if getattr(args, k) != ap.get_default(k))
+    result = run(pdes=tuple(args.pdes.split(",")), hidden=args.hidden,
+                 batch=args.batch, epochs=args.epochs,
+                 num_samples=args.num_samples, ci=args.ci, explicit=explicit)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    for r in result["rows"]:
+        for mode, p in r["parity"].items():
+            assert p["losses_agree"], \
+                f"fused/sequential divergence on {r['pde']} [{mode}]: {p}"
+        assert jnp.isfinite(r["final_loss"]), r
+    print(f"[pde_suite] {len(result['rows'])} problems OK")
+
+
+if __name__ == "__main__":
+    main()

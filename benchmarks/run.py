@@ -3,6 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   * table2/*      — photonic cost model vs the paper's Table 2 numbers
   * table1/*      — CI-scale Table-1 reproduction (val-MSE ordering)
+  * pde_suite/*   — multi-PDE workload suite (fused/sequential parity +
+                    short ZO training per registered problem)
   * kernels/*     — tt_contract + flash_attention vs refs (CPU wall time;
                     derived = max |err| vs oracle)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
@@ -69,16 +71,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table1-epochs", type=int, default=300)
     ap.add_argument("--skip-table1", action="store_true")
+    ap.add_argument("--skip-pde-suite", action="store_true")
+    ap.add_argument("--skip-zo-step", action="store_true",
+                    help="skip the paper-scale fused-vs-naive ZO benchmark "
+                         "(~2-4 min on a 2-core box)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
     from benchmarks import table2_cost
     rows += table2_cost.run()
     bench_kernels(rows)
-    bench_zo_step(rows)
+    if not args.skip_zo_step:
+        bench_zo_step(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)
+    if not args.skip_pde_suite:
+        from benchmarks import pde_suite
+        rows += pde_suite.summarize(pde_suite.run(ci=True))
     try:
         from benchmarks import roofline
         rows += roofline.summarize()

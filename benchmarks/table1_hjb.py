@@ -1,11 +1,12 @@
 """Paper Table 1 reproduction: ONN vs TONN, off-chip vs on-chip (ZO)
 training, with/without hardware noise — validation MSE against the exact
-HJB solution.
+solution of a registered PDE workload (default: the paper's 20-dim HJB).
 
 Budget control: the paper trains hidden=1024 for 5000 epochs; the benchmark
 entry point runs a reduced budget (``--hidden``, ``--epochs``) sized for CI;
 ``examples/hjb_20d_training.py`` runs the fuller configuration.  Both paths
-share this module's ``run_row``.
+share this module's ``run_row``, as does the multi-PDE smoke suite
+(``benchmarks/pde_suite.py``), which threads ``pde=`` through it.
 """
 
 from __future__ import annotations
@@ -23,8 +24,10 @@ from repro.core.photonic import NoiseModel
 def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
             epochs: int = 600, batch: int = 100, seed: int = 0,
             tt_rank: int = 2, tt_L: int = 3, lr: float = 2e-3,
-            sequential: bool = False) -> dict:
-    """One Table-1 cell.  Returns {val_mse, params, seconds}.
+            sequential: bool = False, pde: str = "hjb-20d") -> dict:
+    """One Table-1 cell on the workload ``pde``.  Returns
+    {val_mse_mapped, val_mse_ideal, params, seconds, ...} (val MSEs are NaN
+    for problems without a closed-form solution — track final_loss then).
 
     off-chip = BP training on the ideal model, then (if noise) map the
     trained weights onto noisy hardware and report the degraded loss.
@@ -39,14 +42,22 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
         mode = {"tt": "tonn", "dense": "onn"}[mode]
     nm = NoiseModel(enabled=noise)
     cfg = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=tt_rank,
-                          tt_L=tt_L, noise=nm)
-    model = pinn.HJBPinn(cfg)
+                          tt_L=tt_L, noise=nm, pde=pde)
+    model = pinn.TensorPinn(cfg)
+    problem = model.problem
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
     hw_noise = model.sample_noise(jax.random.fold_in(key, 99)) if noise else None
-    val = pinn.sample_collocation(jax.random.PRNGKey(1234), 1000)
-    t0 = time.time()
+    val = problem.sample_collocation(jax.random.PRNGKey(1234), 1000)
 
+    def batches(i):
+        xt = problem.sample_collocation(jax.random.fold_in(key, i), batch)
+        bc = (problem.boundary_batch(jax.random.fold_in(key, 10_000 + i),
+                                     max(batch // 4, 8))
+              if problem.has_boundary_loss else None)
+        return xt, bc
+
+    t0 = time.time()
     if on_chip:
         # paper's proposed method: forward-only ZO-signSGD on-device
         scfg = zoo.SPSAConfig(num_samples=10, mu=0.01)
@@ -54,38 +65,44 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
         use_batched = not sequential and mode in ("dense", "tt", "tonn")
 
         @jax.jit
-        def step(params, state, xt, lr_t):
-            lf = lambda p: pinn.hjb_residual_loss(model, p, xt, hw_noise)
+        def step(params, state, xt, bc, lr_t):
+            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise, bc=bc)
             blf = (None if not use_batched else
-                   lambda sp: pinn.hjb_residual_losses_stacked(
-                       model, sp, xt, hw_noise))
+                   lambda sp: pinn.residual_losses_stacked(
+                       model, sp, xt, hw_noise, bc=bc))
             return zoo.zo_signsgd_step(lf, params, state, lr=lr_t, cfg=scfg,
                                        batched_loss_fn=blf)
 
+        loss = jnp.zeros(())
         for i in range(epochs):
-            xt = pinn.sample_collocation(jax.random.fold_in(key, i), batch)
+            xt, bc = batches(i)
             lr_t = lr * (0.5 ** (i / max(epochs // 3, 1)))
-            params, state, _ = step(params, state, xt, lr_t)
+            params, state, loss = step(params, state, xt, bc, lr_t)
         final_noise = hw_noise
     else:
         # off-chip: BP on the ideal model (no noise during training)
         @jax.jit
-        def step(params, xt, lr_t):
-            lf = lambda p: pinn.hjb_residual_loss(model, p, xt, None)
+        def step(params, xt, bc, lr_t):
+            lf = lambda p: pinn.residual_loss(model, p, xt, None, bc=bc)
             loss, g = jax.value_and_grad(lf)(params)
             return jax.tree.map(lambda a, b: a - lr_t * b, params, g), loss
 
+        loss = jnp.zeros(())
         for i in range(epochs):
-            xt = pinn.sample_collocation(jax.random.fold_in(key, i), batch)
+            xt, bc = batches(i)
             lr_t = 10 * lr * (0.5 ** (i / max(epochs // 3, 1)))
-            params, _ = step(params, xt, lr_t)
+            params, loss = step(params, xt, bc, lr_t)
         # then map onto hardware: evaluate WITH the noise it never saw
         final_noise = hw_noise
 
-    ideal = float(pinn.validation_mse(model, params, val, None))
-    mapped = float(pinn.validation_mse(model, params, val, final_noise))
-    return {"mode": mode, "on_chip": on_chip, "noise": noise,
+    if problem.has_exact_solution:
+        ideal = float(pinn.validation_mse(model, params, val, None))
+        mapped = float(pinn.validation_mse(model, params, val, final_noise))
+    else:
+        ideal = mapped = float("nan")
+    return {"mode": mode, "on_chip": on_chip, "noise": noise, "pde": pde,
             "val_mse_mapped": mapped, "val_mse_ideal": ideal,
+            "final_loss": float(loss),
             "params": int(sum(np.prod(x.shape)
                               for x in jax.tree.leaves(params))),
             "seconds": round(time.time() - t0, 1)}

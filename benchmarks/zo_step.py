@@ -1,14 +1,16 @@
 """One full ZO-signSGD training step: fused multi-perturbation hot path vs
 the seed's sequential unfused sweep (DESIGN.md §Perf).
 
-Arms per PINN mode (paper config: 20-dim HJB, N=10 SPSA samples):
+Problem-parameterized over the ``repro.pde`` registry (``--pde``; default =
+the paper's 20-dim HJB).  Arms per PINN mode (paper config: N=10 SPSA
+samples):
 
   * ``naive_seed``  — the seed hot path: generic FD stencil (43 stacked
                       inferences), N+1 sequential loss evaluations, unfused
                       ``tt_matvec`` chain, ξ regenerated twice per step.
   * ``fused``       — this repo's hot path: incremental rank-1 FD stencil,
                       all N+1 models evaluated by ONE stacked program
-                      (``hjb_residual_losses_stacked`` →
+                      (``residual_losses_stacked`` →
                       ``tt_contract_batched`` on TPU / stacked jnp chain on
                       CPU), ξ materialized once and reused for the gradient.
 
@@ -27,9 +29,13 @@ Correctness cross-check, for identical ξ (same PRNG key):
     are nearer zero).  Threshold here: 1e-1 (DESIGN.md §Perf); the paper
     config measures 5e-3..2e-2.
 
-Emits ``BENCH_zo_step.json`` so CI tracks the perf trajectory.
+Emits ``BENCH_zo_step.json``.  Run on demand (e.g. via ``benchmarks/run.py``)
+when touching the hot path; CI's per-commit gate is the multi-PDE smoke
+suite (``benchmarks/pde_suite.py --ci``), which asserts the same
+fused/sequential contract through the shared parity harness.
 
-    PYTHONPATH=src python benchmarks/zo_step.py --hidden 1024 --modes tonn,tt
+    PYTHONPATH=src python benchmarks/zo_step.py --hidden 1024 --modes tonn,tt \
+        --pde hjb-20d
 """
 
 from __future__ import annotations
@@ -40,9 +46,13 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import pinn, zoo
+
+try:
+    from benchmarks.pde_suite import parity_check
+except ImportError:  # invoked as `python benchmarks/zo_step.py`
+    from pde_suite import parity_check
 
 
 def _time_pair(fn_a, fn_b, repeats: int = 3) -> tuple:
@@ -64,9 +74,9 @@ def _time_pair(fn_a, fn_b, repeats: int = 3) -> tuple:
 
 def _make_step(model, scfg, xt, noise, batched: bool):
     def step(params, state):
-        lf = lambda p: pinn.hjb_residual_loss(model, p, xt, noise)
+        lf = lambda p: pinn.residual_loss(model, p, xt, noise)
         blf = (None if not batched else
-               lambda sp: pinn.hjb_residual_losses_stacked(
+               lambda sp: pinn.residual_losses_stacked(
                    model, sp, xt, noise))
         return zoo.zo_signsgd_step(lf, params, state, lr=1e-3, cfg=scfg,
                                    batched_loss_fn=blf)
@@ -74,20 +84,21 @@ def _make_step(model, scfg, xt, noise, batched: bool):
 
 
 def bench_mode(mode: str, hidden: int, batch: int, num_samples: int,
-               tt_rank: int, tt_L: int, repeats: int, seed: int = 0) -> dict:
+               tt_rank: int, tt_L: int, repeats: int, seed: int = 0,
+               pde: str = "hjb-20d") -> dict:
     base_cfg = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=tt_rank,
-                               tt_L=tt_L)
+                               tt_L=tt_L, pde=pde)
     naive_cfg = dataclasses.replace(base_cfg, deriv="fd",
                                     use_fused_kernel=False)
     fused_cfg = dataclasses.replace(base_cfg, deriv="fd_fast",
                                     use_fused_kernel=True)
     scfg = zoo.SPSAConfig(num_samples=num_samples, mu=0.01)
     key = jax.random.PRNGKey(seed)
-    xt = pinn.sample_collocation(jax.random.fold_in(key, 1), batch)
+    naive_model = pinn.TensorPinn(naive_cfg)
+    fused_model = pinn.TensorPinn(fused_cfg)
+    xt = naive_model.problem.sample_collocation(jax.random.fold_in(key, 1),
+                                                batch)
     state = zoo.ZOState.create(seed + 1)
-
-    naive_model = pinn.HJBPinn(naive_cfg)
-    fused_model = pinn.HJBPinn(fused_cfg)
     params = naive_model.init(key)
 
     naive_step = _make_step(naive_model, scfg, xt, None, batched=False)
@@ -98,55 +109,35 @@ def bench_mode(mode: str, hidden: int, batch: int, num_samples: int,
 
     # correctness for identical ξ (same key), fused vs sequential-unfused
     # on the SAME derivative estimator (fd_fast): strict tolerance on the
-    # stencil u-values, FD-noise-floor tolerance on the losses (see module
-    # docstring).
-    check_cfg = dataclasses.replace(base_cfg, deriv="fd_fast",
-                                    use_fused_kernel=False)
-    check_model = pinn.HJBPinn(check_cfg)
-    sub = jax.random.fold_in(key, 2)
-    xis = zoo.sample_perturbations(sub, params, num_samples)
-    sp = jax.tree.map(lambda p, z: p + scfg.mu * z, params, xis)
-    prepared = fused_model.prepare_params_stacked(sp, None)
-    u_fused = fused_model.fd_u_stencil_stacked(prepared, xt,
-                                               fused_cfg.fd_step)
-    u_seq = jnp.stack([
-        check_model.fd_u_stencil(jax.tree.map(lambda z: z[i], sp), xt,
-                                 check_cfg.fd_step)
-        for i in range(num_samples)])
-    u_rel = float(jnp.max(jnp.abs(u_fused - u_seq)
-                          / (jnp.abs(u_seq) + 1e-6)))
-
-    lf_seq = lambda p: pinn.hjb_residual_loss(check_model, p, xt)
-    l_seq = zoo.spsa_losses(lf_seq, params, sub, scfg)
-    l_fused = zoo.spsa_losses(
-        lf_seq, params, sub, scfg,
-        batched_loss_fn=lambda s: pinn.hjb_residual_losses_stacked(
-            fused_model, s, xt))
-    # normalize by the largest loss: tiny near-zero entries otherwise blow
-    # up the per-element relative error without any actual disagreement
-    loss_rel = float(jnp.max(jnp.abs(l_fused - l_seq))
-                     / (float(jnp.max(jnp.abs(l_seq))) + 1e-12))
+    # stencil u-values, FD-noise-floor tolerance on the losses — asserted
+    # through the SHARED parity harness (benchmarks/pde_suite.py, the single
+    # home of the DESIGN.md §Perf numerical contract).
+    parity = parity_check(pde, hidden=hidden, batch=batch,
+                          num_samples=num_samples, tt_rank=tt_rank,
+                          tt_L=tt_L, seed=seed, mode=mode)
 
     return {
         "mode": mode,
+        "pde": pde,
         "naive_seed_ms": round(naive_ms, 2),
         "fused_ms": round(fused_ms, 2),
         "speedup": round(naive_ms / fused_ms, 2),
-        "u_max_rel_err": u_rel,
-        "loss_max_rel_err": loss_rel,
-        "losses_agree": bool(u_rel < 1e-4 and loss_rel < 1e-1),
+        **parity,
     }
 
 
 def run(hidden: int = 1024, batch: int = 100, num_samples: int = 10,
         tt_rank: int = 2, tt_L: int = 4, repeats: int = 3,
-        modes: tuple = ("tonn", "tt")) -> dict:
-    rows = [bench_mode(m, hidden, batch, num_samples, tt_rank, tt_L, repeats)
+        modes: tuple = ("tonn", "tt"), pde: str = "hjb-20d") -> dict:
+    from repro import pde as pde_lib
+    rows = [bench_mode(m, hidden, batch, num_samples, tt_rank, tt_L, repeats,
+                       pde=pde)
             for m in modes]
     return {
         "config": {"hidden": hidden, "batch": batch,
                    "num_samples": num_samples, "tt_rank": tt_rank,
-                   "tt_L": tt_L, "space_dim": 20,
+                   "tt_L": tt_L, "pde": pde,
+                   "space_dim": pde_lib.get_problem(pde).space_dim,
                    "backend": jax.default_backend()},
         "rows": rows,
     }
@@ -175,13 +166,15 @@ def main() -> None:
     ap.add_argument("--tt-L", type=int, default=4)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--modes", default="tonn,tt")
+    ap.add_argument("--pde", default="hjb-20d",
+                    help="registered PDE workload (repro.pde.available())")
     ap.add_argument("--out", default="BENCH_zo_step.json")
     args = ap.parse_args()
 
     result = run(hidden=args.hidden, batch=args.batch,
                  num_samples=args.num_samples, tt_rank=args.tt_rank,
                  tt_L=args.tt_L, repeats=args.repeats,
-                 modes=tuple(args.modes.split(",")))
+                 modes=tuple(args.modes.split(",")), pde=args.pde)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result, indent=2))

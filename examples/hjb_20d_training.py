@@ -18,6 +18,8 @@ ap.add_argument("--hidden", type=int, default=64)
 ap.add_argument("--epochs", type=int, default=800)
 ap.add_argument("--tonn", action="store_true",
                 help="use true per-core MZI-mesh params (slower, exact)")
+ap.add_argument("--pde", default="hjb-20d",
+                help="any registered workload (repro.pde.available())")
 args = ap.parse_args()
 
 rows = []
@@ -27,7 +29,8 @@ for mode, on_chip, noise, label in [
     ("tt", False, True, "TONN off-chip mapped to noisy hw"),
     ("tonn" if args.tonn else "tt", True, True, "TONN on-chip ZO w/ noise (PROPOSED)"),
 ]:
-    r = run_row(mode, on_chip, noise, hidden=args.hidden, epochs=args.epochs)
+    r = run_row(mode, on_chip, noise, hidden=args.hidden, epochs=args.epochs,
+                pde=args.pde)
     r["label"] = label
     rows.append(r)
     print(f"{label:42s} val MSE (mapped) {r['val_mse_mapped']:.2e} "

@@ -1,37 +1,54 @@
 """Quickstart: the paper's technique in 30 lines.
 
-Builds the TT-compressed PINN for the 20-dim HJB PDE and trains it fully
-BP-free (SPSA + ZO-signSGD) — the exact algorithm the photonic chip would
-run, simulated in JAX.  ~2 minutes on CPU at reduced width.
+Builds the TT-compressed PINN for any registered PDE workload (default: the
+20-dim HJB of the paper) and trains it fully BP-free (SPSA + ZO-signSGD) —
+the exact algorithm the photonic chip would run, simulated in JAX.
+~2 minutes on CPU at reduced width.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --pde heat-20d
 """
+import argparse
+
 import jax
 
 from repro.core import pinn, zoo
 
-cfg = pinn.PINNConfig(hidden=64, mode="tt", tt_rank=2, tt_L=3)
-model = pinn.HJBPinn(cfg)
-params = model.init(jax.random.PRNGKey(0))
-print(f"trainable params: {sum(x.size for x in jax.tree.leaves(params))}")
+ap = argparse.ArgumentParser()
+ap.add_argument("--pde", default="hjb-20d")
+ap.add_argument("--steps", type=int, default=1200)
+args = ap.parse_args()
 
-val = pinn.sample_collocation(jax.random.PRNGKey(2), 500)
+cfg = pinn.PINNConfig(hidden=64, mode="tt", tt_rank=2, tt_L=3, pde=args.pde)
+model = pinn.TensorPinn(cfg)
+problem = model.problem
+params = model.init(jax.random.PRNGKey(0))
+print(f"pde: {problem.name}  trainable params: "
+      f"{sum(x.size for x in jax.tree.leaves(params))}")
+
+val = problem.sample_collocation(jax.random.PRNGKey(2), 500)
 scfg = zoo.SPSAConfig(num_samples=10, mu=0.01)  # paper Eq. (5)
 state = zoo.ZOState.create(3)
 
 
 @jax.jit
-def step(params, state, xt, lr):
-    loss_fn = lambda p: pinn.hjb_residual_loss(model, p, xt)  # BP-free (FD)
+def step(params, state, xt, bc, lr):
+    loss_fn = lambda p: pinn.residual_loss(model, p, xt, bc=bc)  # BP-free (FD)
     return zoo.zo_signsgd_step(loss_fn, params, state, lr=lr, cfg=scfg)
 
 
-for i in range(1200):
-    xt = pinn.sample_collocation(jax.random.fold_in(jax.random.PRNGKey(9), i), 100)
-    params, state, loss = step(params, state, xt, 2e-3 * 0.5 ** (i / 400))
+for i in range(args.steps):
+    key_i = jax.random.fold_in(jax.random.PRNGKey(9), i)
+    xt = problem.sample_collocation(key_i, 100)
+    bc = (problem.boundary_batch(jax.random.fold_in(key_i, 1), 25)
+          if problem.has_boundary_loss else None)
+    params, state, loss = step(params, state, xt, bc,
+                               2e-3 * 0.5 ** (i / max(args.steps // 3, 1)))
     if i % 200 == 0:
-        mse = float(pinn.validation_mse(model, params, val))
+        mse = (float(pinn.validation_mse(model, params, val))
+               if problem.has_exact_solution else float("nan"))
         print(f"step {i:5d}  residual loss {float(loss):.4f}  val MSE {mse:.5f}")
 
-print("final val MSE:", float(pinn.validation_mse(model, params, val)),
-      "(paper @1024/5000 epochs: 5.53e-3)")
+if problem.has_exact_solution:
+    ref = " (paper @1024/5000 epochs: 5.53e-3)" if args.pde == "hjb-20d" else ""
+    print("final val MSE:",
+          float(pinn.validation_mse(model, params, val)), ref)

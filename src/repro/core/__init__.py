@@ -1,5 +1,6 @@
 """Core paper contribution: TT compression, photonic simulation, BP-free
-(zeroth-order) training, BP-free derivative estimation, the HJB PINN, and
+(zeroth-order) training, BP-free derivative estimation, the
+problem-parameterized tensor PINN (workloads live in ``repro.pde``), and
 the photonic cost model."""
 
 from repro.core import costmodel, photonic, pinn, stein, tt, zoo  # noqa: F401

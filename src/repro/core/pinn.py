@@ -1,15 +1,10 @@
-"""Physics-informed neural networks + the paper's 20-dim HJB benchmark (§2.2, §4).
+"""Physics-informed neural networks, problem-parameterized (§2.2, §4).
 
-The PDE (paper Eq. 7):
-
-    ∂_t u + Δu − 0.05 ‖∇_x u‖₂² = −2,
-    u(x, 1) = ‖x‖₁,  x ∈ [0,1]^20, t ∈ [0,1];   exact: u = ‖x‖₁ + 1 − t.
-
-The ansatz  u(x,t;Φ) = (1−t)·f(x,t;Φ) + ‖x‖₁  satisfies the terminal
-condition exactly, so the training loss is the PDE residual alone.
-
-``HJBPinn`` builds the paper's 3-layer MLP (in → n → n → 1, sine activation)
-in four parametrizations:
+``TensorPinn`` is the paper's 3-layer sine MLP (in → n → n → 1) bound to a
+``repro.pde.PDEProblem`` — the workload supplies the collocation domain, the
+hard-constraint ansatz ``u = T(f, xt)``, the pointwise residual from a
+``DerivativeEstimate``, and (optionally) a boundary term L_b and an exact
+solution; the model supplies the four parametrizations:
 
   * ``dense`` — ideal digital weights (the "off-chip" pre-training model),
   * ``onn``   — every weight an SVD MZI-mesh ``PhotonicMatrix`` (paper's ONN),
@@ -17,34 +12,46 @@ in four parametrizations:
   * ``tonn``  — TT-cores whose unfoldings are themselves MZI meshes — the
                 paper's proposed hardware; ZO training tunes the phases.
 
-The final n×1 layer is a direct amplitude-encoded weight vector (a photonic
-fan-in needs no MZI mesh), matching the paper's parameter count
-(TT 1024: 2×256 core params + 1024 = 1,536).
+The paper's own benchmark is ``pde="hjb-20d"`` (Eq. 7, §4: exact ansatz
+u = (1−t)·f + ‖x‖₁, TT 1024: 2×256 core params + 1024 = 1,536); the
+registry adds heat / Black–Scholes / Helmholtz workloads on the same stack.
 
 All forwards are pure functions of a params pytree → usable under
 ``jax.jit``, ``jax.grad`` (off-chip baselines) and the ZO optimizer
-(on-chip, forward-only).
+(on-chip, forward-only).  The fused multi-perturbation ZO hot path
+(DESIGN.md §Perf: densify-once, stacked TT contraction, shared FD stencil)
+is problem-generic — problems only plug in ``ansatz`` (broadcast over the
+stacked perturbation axis) and ``residual`` (consuming the generic stencil
+estimate); see DESIGN.md §PDE for the exact contract.
+
+Deprecated aliases (``HJBPinn``, ``hjb_residual_loss``,
+``hjb_residual_losses_stacked``, ``hjb_exact_solution``) keep the pre-registry
+HJB-specific API importable.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import pde as pde_lib
 from repro.core import fastmath, photonic, stein, tt
 
-__all__ = ["PINNConfig", "HJBPinn", "hjb_exact_solution", "sample_collocation",
-           "hjb_residual_loss", "hjb_residual_losses_stacked", "validation_mse"]
+__all__ = ["PINNConfig", "TensorPinn", "sample_collocation",
+           "residual_loss", "residual_losses_stacked", "validation_mse",
+           # deprecated HJB-specific aliases
+           "HJBPinn", "hjb_exact_solution", "hjb_residual_loss",
+           "hjb_residual_losses_stacked"]
 
 
 @dataclasses.dataclass(frozen=True)
 class PINNConfig:
-    space_dim: int = 20
+    space_dim: int = 20         # deprecated: the PDE problem owns its dims;
+    #                             honored only by the HJBPinn compat wrapper
     hidden: int = 1024
     mode: str = "tonn"          # dense | onn | tt | tonn
     tt_rank: int = 2            # paper: ranks [1,2,1,2,1]
@@ -56,37 +63,52 @@ class PINNConfig:
     use_fused_kernel: bool = False  # route TT matvecs through the Pallas
     #                                 kernel dispatcher (repro.kernels.ops):
     #                                 fused VMEM chain on TPU, jnp ref on CPU
+    pde: str = "hjb-20d"        # registry name resolved by TensorPinn when
+    #                             no problem instance is passed explicitly
     noise: photonic.NoiseModel = dataclasses.field(
         default_factory=lambda: photonic.NoiseModel(enabled=False))
 
     @property
     def in_dim(self) -> int:
-        return self.space_dim + 1  # (x, t)
+        """Deprecated: (x, t) input width of the HJB compat path — the model
+        takes its true input width from the bound ``PDEProblem``."""
+        return self.space_dim + 1
 
 
 def hjb_exact_solution(xt: jax.Array) -> jax.Array:
-    """u(x,t) = ‖x‖₁ + 1 − t."""
-    x, t = xt[..., :-1], xt[..., -1]
-    return jnp.sum(jnp.abs(x), axis=-1) + 1.0 - t
+    """Deprecated alias: ``pde.HJBProblem.exact_solution`` (u = ‖x‖₁+1−t)."""
+    return pde_lib.HJBProblem().exact_solution(xt)
 
 
 def sample_collocation(key: jax.Array, n: int, space_dim: int = 20,
                        margin: float = 0.02) -> jax.Array:
-    """Uniform (x, t) ∈ [margin, 1−margin]^D × [0, 1−margin].
+    """HJB-domain collocation sampler, kept for the pre-registry API.
 
-    The margin keeps FD stencils away from the |x| kink at 0 and the domain
-    boundary (the exact solution is smooth inside).
+    Bit-identical to ``pde.HJBProblem(space_dim, margin).sample_collocation``
+    (uniform (x, t) ∈ [margin, 1−margin]^{D+1}; the margin keeps FD stencils
+    away from the |x| kink at 0 and the domain boundary).
     """
-    pts = jax.random.uniform(key, (n, space_dim + 1),
-                             minval=margin, maxval=1.0 - margin)
-    return pts
+    return pde_lib.HJBProblem(space_dim, margin).sample_collocation(key, n)
 
 
-class HJBPinn:
-    """The paper's 3-layer sine MLP in a chosen parametrization."""
+class TensorPinn:
+    """The paper's 3-layer sine MLP in a chosen parametrization, solving a
+    registered ``PDEProblem`` (``cfg.pde`` or an explicit instance)."""
 
-    def __init__(self, cfg: PINNConfig):
+    def __init__(self, cfg: PINNConfig,
+                 problem: pde_lib.PDEProblem | None = None):
         self.cfg = cfg
+        self.problem = problem if problem is not None \
+            else pde_lib.get_problem(cfg.pde)
+        # the problem owns the input geometry (cfg.space_dim is legacy)
+        self.space_dim = self.problem.space_dim
+        self.in_dim = self.problem.in_dim
+        # effective FD step: an explicit config value wins; the dataclass
+        # default defers to the problem's recommended step (the one its
+        # residual_tol noise floor is documented at — DESIGN.md §PDE)
+        default_h = PINNConfig.__dataclass_fields__["fd_step"].default
+        self.fd_step = (cfg.fd_step if cfg.fd_step != default_h
+                        else self.problem.fd_step)
         self._kron_split: int | None = None
         # stacked hot path: vectorized polynomial sine (XLA:CPU's jnp.sin is
         # a scalar libm call); ~2 ulp, within the FD noise floor (DESIGN.md
@@ -94,11 +116,11 @@ class HJBPinn:
         self._sin = fastmath.fast_sin if cfg.use_fused_kernel else jnp.sin
         h = cfg.hidden
         if cfg.mode in ("tt", "tonn"):
-            # pad the (x,t) input up to a TT-factorizable width (the paper
-            # folds 21 → 1024 so layer 1 is a 1024×1024 TT matrix)
-            self.in_pad = h if h >= cfg.in_dim else -(-cfg.in_dim // 8) * 8
+            # pad the input up to a TT-factorizable width (the paper folds
+            # 21 → 1024 so layer 1 is a 1024×1024 TT matrix)
+            self.in_pad = h if h >= self.in_dim else -(-self.in_dim // 8) * 8
         else:
-            self.in_pad = cfg.in_dim
+            self.in_pad = self.in_dim
         # layer dims after padding the input up to the TT-factorizable size
         self.dims = [(h, self.in_pad), (h, h), (1, h)]
         if cfg.mode in ("tt", "tonn"):
@@ -240,12 +262,11 @@ class HJBPinn:
         return tt.tt_matvec(cores, x, spec)
 
     def f(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
-        """Base network f(x,t): (B, in_dim) → (B,)."""
-        cfg = self.cfg
+        """Base network f(xt): (B, in_dim) → (B,)."""
         params, noise = self.prepare_params(params, noise)
         h = xt
-        if self.in_pad > cfg.in_dim:
-            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - cfg.in_dim,), h.dtype)
+        if self.in_pad > self.in_dim:
+            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.in_dim,), h.dtype)
             h = jnp.concatenate([h, pad], axis=-1)
         for i in range(2):
             h = self._layer_matvec(params, noise, i, h) + params[f"b{i}"]
@@ -254,9 +275,9 @@ class HJBPinn:
         return out[..., 0]
 
     def u(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
-        """Transformed ansatz u = (1−t)·f + ‖x‖₁ (terminal condition exact)."""
-        x, t = xt[..., :-1], xt[..., -1]
-        return (1.0 - t) * self.f(params, xt, noise) + jnp.sum(jnp.abs(x), axis=-1)
+        """Problem ansatz u = T(f, xt) — e.g. HJB's (1−t)·f + ‖x‖₁, which
+        makes the terminal condition exact."""
+        return self.problem.ansatz(self.f(params, xt, noise), xt)
 
     # -------------------------------------------------- incremental FD (perf)
     def _layer1_columns(self, params: dict, noise: dict | None) -> jax.Array:
@@ -265,33 +286,14 @@ class HJBPinn:
         so its perturbed pre-activations are rank-1 updates of the base one.
         Cost: one (in_dim × hidden) extraction instead of 2·D extra layer-1
         matvecs per collocation point (EXPERIMENTS.md §Perf cell 3)."""
-        cfg = self.cfg
-        eye = jnp.eye(cfg.in_dim, self.in_pad, dtype=jnp.float32)
+        eye = jnp.eye(self.in_dim, self.in_pad, dtype=jnp.float32)
         return self._layer_matvec(params, noise, 0, eye)      # (in_dim, H)
-
-    def _stencil_f_to_u(self, f: jax.Array, xt: jax.Array, h: float) -> jax.Array:
-        """Transform stencil f-values (2·Din+1, B) into u-values via the
-        ansatz u = (1−t)·f + ‖x‖₁ applied at each perturbed coordinate."""
-        Din = xt.shape[-1]
-        x, t = xt[..., :-1], xt[..., -1]
-        l1 = jnp.sum(jnp.abs(x), axis=-1)                             # (B,)
-        D = self.cfg.space_dim
-        base = (1.0 - t) * f[0] + l1
-        rows = [base[None]]
-        for sgn, off in ((1.0, 1), (-1.0, 1 + Din)):
-            # spatial coords: ‖x ± h e_i‖₁ = ‖x‖₁ ± sgn(x_i)·h (inside domain)
-            lx = l1[None, :] + sgn * h * jnp.sign(x).T                # (D,B)
-            ux = (1.0 - t)[None, :] * f[off:off + D] + lx
-            # temporal coord: t ± h
-            ut = (1.0 - (t + sgn * h))[None, :] * f[off + D:off + D + 1] \
-                + l1[None, :]
-            rows.append(jnp.concatenate([ux, ut], axis=0))
-        return jnp.concatenate(rows, axis=0)                          # (2Din+1,B)
 
     def fd_u_stencil(self, params: dict, xt: jax.Array, h: float,
                      noise: dict | None = None) -> jax.Array:
-        """u at [x, x+h·e_1, x−h·e_1, ..., ±h·e_D+1]: (2·in+1, B) values with
-        layer 1 computed ONCE (incremental rank-1 FD forward)."""
+        """u at [x, x+h·e_1, ..., x−h·e_Din]: (2·in_dim+1, B) values with
+        layer 1 computed ONCE (incremental rank-1 FD forward); the problem
+        ansatz is applied pointwise at the perturbed coordinates."""
         cfg = self.cfg
         params, noise = self.prepare_params(params, noise)
         B, Din = xt.shape
@@ -311,7 +313,7 @@ class HJBPinn:
                     + params["b1"])
         f = (a @ params["w2"].T + params["b2"])[..., 0]
         f = f.reshape(2 * Din + 1, B)
-        return self._stencil_f_to_u(f, xt, h)
+        return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h))
 
     # --------------------------------------- stacked (multi-perturbation) ZO
     def prepare_params_stacked(self, stacked: dict, noise: dict | None) -> dict:
@@ -400,7 +402,8 @@ class HJBPinn:
         batched program: (P, 2·Din+1, B) u-values.  The collocation stencil
         is shared across the stack, so layer 1 reads x once per batch tile
         regardless of P (the fused-kernel analogue of TONN's one optical
-        pass over all perturbed meshes)."""
+        pass over all perturbed meshes); the problem ansatz broadcasts over
+        the leading P axis."""
         cfg = self.cfg
         B, Din = xt.shape
         P = stacked["b0"].shape[0]
@@ -410,7 +413,7 @@ class HJBPinn:
                 [xt, jnp.zeros((B, self.in_pad - Din), xt.dtype)], axis=-1)
         z0 = self._layer_matvec_stacked(stacked, 0, xp) \
             + stacked["b0"][:, None]                                  # (P,B,H)
-        eye = jnp.eye(cfg.in_dim, self.in_pad, dtype=jnp.float32)
+        eye = jnp.eye(self.in_dim, self.in_pad, dtype=jnp.float32)
         cols = self._layer_matvec_stacked(stacked, 0, eye)            # (P,Din,H)
         hcols = h * cols
         z = jnp.concatenate(
@@ -419,15 +422,14 @@ class HJBPinn:
              z0[:, None] - hcols[:, :, None]], axis=1)        # (P,2Din+1,B,H)
         a = self._sin(z).reshape(P, (2 * Din + 1) * B, cfg.hidden)
         f = self._f_head_stacked(stacked, a).reshape(P, 2 * Din + 1, B)
-        return jax.vmap(lambda fv: self._stencil_f_to_u(fv, xt, h))(f)
+        return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h))
 
     def f_stacked(self, stacked: dict, xt: jax.Array) -> jax.Array:
         """Base network for P stacked (prepared) parameter sets over a
         SHARED input batch: (B, in_dim) → (P, B)."""
-        cfg = self.cfg
         h = xt
-        if self.in_pad > cfg.in_dim:
-            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - cfg.in_dim,), h.dtype)
+        if self.in_pad > self.in_dim:
+            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.in_dim,), h.dtype)
             h = jnp.concatenate([h, pad], axis=-1)
         a = self._sin(self._layer_matvec_stacked(stacked, 0, h)
                       + stacked["b0"][:, None])
@@ -435,101 +437,142 @@ class HJBPinn:
 
     def u_stacked(self, stacked: dict, xt: jax.Array) -> jax.Array:
         """Ansatz u for P stacked parameter sets: (B, in_dim) → (P, B)."""
-        x, t = xt[..., :-1], xt[..., -1]
-        return (1.0 - t) * self.f_stacked(stacked, xt) \
-            + jnp.sum(jnp.abs(x), axis=-1)
+        return self.problem.ansatz(self.f_stacked(stacked, xt), xt)
+
+
+class HJBPinn(TensorPinn):
+    """Deprecated alias: ``TensorPinn`` bound to the paper's HJB problem
+    (``cfg.space_dim`` spatial dims) — the pre-registry constructor."""
+
+    def __init__(self, cfg: PINNConfig):
+        super().__init__(cfg, problem=pde_lib.HJBProblem(cfg.space_dim))
 
 
 # ---------------------------------------------------------------------- loss
 
-def _residual_from_estimate(est: stein.DerivativeEstimate,
-                            space_dim: int) -> jax.Array:
-    """Paper Eq. 7 residual loss — the single home of the PDE formula:
-    residual = u_t + Δ_x u − 0.05 ‖∇_x u‖² + 2."""
-    u_t = est.grad[:, space_dim]
-    grad_x = est.grad[:, :space_dim]
-    lap = jnp.sum(est.hess_diag[:, :space_dim], axis=-1)
-    resid = u_t + lap - 0.05 * jnp.sum(grad_x * grad_x, axis=-1) + 2.0
-    return jnp.mean(resid * resid)
+def _loss_from_u_stencil(problem: pde_lib.PDEProblem, vals: jax.Array,
+                         h: float, xt: jax.Array) -> jax.Array:
+    """Residual loss from u-values at the central-difference stencil
+    [x, x+h·e_1, ..., x−h·e_Din]: vals (2·Din+1, B) → scalar.  The generic
+    stencil→DerivativeEstimate assembly is problem-independent; the problem
+    supplies the estimate→residual reduction."""
+    est = pde_lib.estimate_from_u_stencil(vals, h)
+    r = problem.residual(est, xt)
+    return jnp.mean(r * r)
 
 
-def _loss_from_u_stencil(vals: jax.Array, h: float, space_dim: int) -> jax.Array:
-    """HJB residual loss from u-values at the central-difference stencil
-    [x, x+h·e_1, ..., x−h·e_Din]: vals (2·Din+1, B) → scalar."""
-    Din = (vals.shape[0] - 1) // 2
-    u0, up, um = vals[0], vals[1:Din + 1], vals[Din + 1:]
-    est = stein.DerivativeEstimate(
-        u=u0, grad=((up - um) / (2.0 * h)).T,
-        hess_diag=((up - 2.0 * u0[None] + um) / (h * h)).T)
-    return _residual_from_estimate(est, space_dim)
+def _boundary_mse(u_b: jax.Array, ub_target: jax.Array) -> jax.Array:
+    """Mean-squared boundary mismatch, reduced over the trailing (batch)
+    axis so it broadcasts over a leading stacked-perturbation axis."""
+    return jnp.mean((u_b - ub_target) ** 2, axis=-1)
 
 
-def _fd_stencil_points(xt: jax.Array, h: float) -> jax.Array:
-    """(2D+1, B, D) perturbed collocation batch of ``stein.fd_estimate``."""
-    B, D = xt.shape
-    eye = jnp.eye(D, dtype=xt.dtype) * jnp.asarray(h, dtype=xt.dtype)
-    plus = xt[None, :, :] + eye[:, None, :]
-    minus = xt[None, :, :] - eye[:, None, :]
-    return jnp.concatenate([xt[None], plus, minus], axis=0)
+def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
+                  noise: dict | None = None,
+                  key: jax.Array | None = None,
+                  bc: tuple | None = None) -> jax.Array:
+    """BP-free PDE loss (paper Eq. 4): L_r, plus λ·L_b when the problem has
+    a boundary term and a boundary batch ``bc = (xb, ub_target)`` is given.
 
-
-def hjb_residual_loss(model: HJBPinn, params: dict, xt: jax.Array,
-                      noise: dict | None = None,
-                      key: jax.Array | None = None) -> jax.Array:
-    """BP-free PDE residual loss (paper Eq. 4 restricted to L_r).
-
-    residual = u_t + Δ_x u − 0.05 ‖∇_x u‖² + 2, derivatives estimated by
-    inference-only FD or Stein (cfg.deriv).  TONN densification is hoisted
-    here: ONE mesh→core pass per loss evaluation, shared by every stencil
-    inference (DESIGN.md §Perf).
+    Derivatives are estimated inference-only (FD or Stein per ``cfg.deriv``);
+    the bound ``PDEProblem`` reduces the estimate to a pointwise residual.
+    TONN densification is hoisted here: ONE mesh→core pass per loss
+    evaluation, shared by every stencil inference (DESIGN.md §Perf).
     """
     cfg = model.cfg
+    problem = model.problem
     params, noise = model.prepare_params(params, noise)
-    f = lambda pts: model.u(params, pts, noise)
     if cfg.deriv == "fd_fast":
         # incremental rank-1 FD forward: layer 1 computed once (§Perf cell 3)
-        vals = model.fd_u_stencil(params, xt, cfg.fd_step, noise)
-        return _loss_from_u_stencil(vals, cfg.fd_step, cfg.space_dim)
-    if cfg.deriv == "fd":
-        est = stein.fd_estimate(f, xt, h=cfg.fd_step)
+        vals = model.fd_u_stencil(params, xt, model.fd_step, noise)
+        loss = _loss_from_u_stencil(problem, vals, model.fd_step, xt)
     else:
-        assert key is not None, "stein estimator needs a PRNG key"
-        est = stein.stein_estimate(f, xt, key, sigma=cfg.stein_sigma,
-                                   num_samples=cfg.stein_samples)
-    return _residual_from_estimate(est, cfg.space_dim)
+        f = lambda pts: model.u(params, pts, noise)
+        if cfg.deriv == "fd":
+            est = stein.fd_estimate(f, xt, h=model.fd_step)
+        else:
+            assert key is not None, "stein estimator needs a PRNG key"
+            est = stein.stein_estimate(f, xt, key, sigma=cfg.stein_sigma,
+                                       num_samples=cfg.stein_samples)
+        r = problem.residual(est, xt)
+        loss = jnp.mean(r * r)
+    if bc is not None:
+        xb, ub = bc
+        loss = loss + problem.bc_weight * _boundary_mse(
+            model.u(params, xb, noise), ub)
+    return loss
 
 
-def hjb_residual_losses_stacked(model: HJBPinn, stacked_params: dict,
-                                xt: jax.Array, noise: dict | None = None,
-                                key: jax.Array | None = None) -> jax.Array:
+def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
+                            xt: jax.Array, noise: dict | None = None,
+                            key: jax.Array | None = None,
+                            bc: tuple | None = None) -> jax.Array:
     """The ZO hot path: residual losses of P stacked parameter sets (leading
     axis on every leaf) over ONE shared collocation batch → (P,) losses.
 
-    For tt/tonn/dense with FD derivatives this runs as a small number of
+    For dense/tt/tonn with FD derivatives this runs as a small number of
     batched programs (densify-once, stacked TT contraction via
     ``tt_linear_batched``, one shared stencil) instead of P independent
     forwards.  Other mode/estimator combinations fall back to a vmap of the
-    scalar loss — correct everywhere, fused where it matters.
+    scalar loss — correct everywhere, fused where it matters.  The fallback
+    SPLITS ``key`` per perturbation, so stochastic estimators (Stein) draw
+    independent noise for each stacked entry: stacked entry i equals
+    ``residual_loss(model, params_i, xt, noise, jax.random.split(key, P)[i])``.
     """
     cfg = model.cfg
+    problem = model.problem
     if cfg.mode not in ("dense", "tt", "tonn") or \
             cfg.deriv not in ("fd", "fd_fast"):
+        if key is None:
+            return jax.vmap(
+                lambda p: residual_loss(model, p, xt, noise, None, bc)
+            )(stacked_params)
+        P = jax.tree.leaves(stacked_params)[0].shape[0]
+        keys = jax.random.split(key, P)
         return jax.vmap(
-            lambda p: hjb_residual_loss(model, p, xt, noise, key)
-        )(stacked_params)
+            lambda p, k: residual_loss(model, p, xt, noise, k, bc)
+        )(stacked_params, keys)
     prepared = model.prepare_params_stacked(stacked_params, noise)
-    h = cfg.fd_step
+    h = model.fd_step
     if cfg.deriv == "fd_fast":
         vals = model.fd_u_stencil_stacked(prepared, xt, h)   # (P, 2D+1, B)
     else:
         B, D = xt.shape
-        pts = _fd_stencil_points(xt, h)
+        pts = pde_lib.fd_stencil_points(xt, h)
         vals = model.u_stacked(prepared, pts.reshape(-1, D))
         vals = vals.reshape(vals.shape[0], 2 * D + 1, B)
-    return jax.vmap(lambda v: _loss_from_u_stencil(v, h, cfg.space_dim))(vals)
+    losses = jax.vmap(
+        lambda v: _loss_from_u_stencil(problem, v, h, xt))(vals)
+    if bc is not None:
+        xb, ub = bc
+        losses = losses + problem.bc_weight * _boundary_mse(
+            model.u_stacked(prepared, xb), ub)
+    return losses
 
 
-def validation_mse(model: HJBPinn, params: dict, xt: jax.Array,
+def validation_mse(model: TensorPinn, params: dict, xt: jax.Array,
                    noise: dict | None = None) -> jax.Array:
+    """MSE against the problem's closed-form solution (raises without one)."""
+    exact = model.problem.exact_solution(xt)
+    if exact is None:
+        raise ValueError(
+            f"PDE {model.problem.name!r} has no exact solution; "
+            "track the residual loss instead")
     pred = model.u(params, xt, noise)
-    return jnp.mean((pred - hjb_exact_solution(xt)) ** 2)
+    return jnp.mean((pred - exact) ** 2)
+
+
+# ------------------------------------------------- deprecated HJB-era names
+
+def hjb_residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
+                      noise: dict | None = None,
+                      key: jax.Array | None = None) -> jax.Array:
+    """Deprecated alias of ``residual_loss`` (works for any bound problem)."""
+    return residual_loss(model, params, xt, noise, key)
+
+
+def hjb_residual_losses_stacked(model: TensorPinn, stacked_params: dict,
+                                xt: jax.Array, noise: dict | None = None,
+                                key: jax.Array | None = None) -> jax.Array:
+    """Deprecated alias of ``residual_losses_stacked``."""
+    return residual_losses_stacked(model, stacked_params, xt, noise, key)

@@ -19,8 +19,9 @@ Fused hot path (DESIGN.md §Perf): the N perturbations ξ_i are materialized
 ONCE as a stacked pytree (``sample_perturbations``) and the N+1 losses —
 base included — are evaluated by a single batched program when the caller
 supplies ``batched_loss_fn: stacked_params -> (P,) losses`` (e.g.
-``pinn.hjb_residual_losses_stacked``, which lowers to the stacked
-TT-contraction kernel) or sets ``SPSAConfig.vectorized`` (generic vmap).
+``pinn.residual_losses_stacked``, which lowers to the stacked
+TT-contraction kernel for any registered PDE problem) or sets
+``SPSAConfig.vectorized`` (generic vmap).
 The gradient reconstruction then reuses the same ξ stack as one tensordot
 instead of regenerating every perturbation a second time through a
 ``lax.scan`` — halving RNG + perturbation work per step.  The sequential

@@ -62,8 +62,18 @@ def lm_batch_iterator(cfg: DataConfig, start_step: int = 0,
 
 
 def pde_collocation_iterator(n: int, space_dim: int = 20, seed: int = 0,
-                             start_step: int = 0) -> Iterator[jax.Array]:
+                             start_step: int = 0,
+                             pde: str | None = None) -> Iterator[jax.Array]:
+    """Counter-based collocation stream.  ``pde`` selects a registered
+    problem's own domain sampler (``repro.pde``); the default keeps the
+    legacy HJB-domain behavior parameterized by ``space_dim``."""
+    if pde is not None:
+        from repro import pde as pde_lib
+        problem = pde_lib.get_problem(pde)
+        sample = lambda key: problem.sample_collocation(key, n)
+    else:
+        sample = lambda key: pinn_lib.sample_collocation(key, n, space_dim)
     step = start_step
     while True:
-        yield pinn_lib.sample_collocation(_step_key(seed, step), n, space_dim)
+        yield sample(_step_key(seed, step))
         step += 1

@@ -1,7 +1,8 @@
 """End-to-end training launcher.
 
 Runs any assigned architecture (``--arch``, optionally ``--reduced``) or the
-paper's HJB PINN (``--arch hjb-pinn``) with:
+paper's BP-free tensor PINN (``--arch hjb-pinn`` / ``tensor-pinn``) on any
+registered PDE workload (``--pde``, see ``repro.pde``) with:
 
   * pjit/GSPMD sharding over an explicit mesh (``--mesh dxm``, default =
     all local devices on the data axis),
@@ -11,9 +12,11 @@ paper's HJB PINN (``--arch hjb-pinn``) with:
   * straggler watchdog,
   * optional sign-compressed gradient all-reduce across the ``pod`` axis.
 
-Example (CPU, reduced config):
+Examples (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.train \
         --arch qwen2.5-3b --reduced --steps 20 --batch 8 --seq 64
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch hjb-pinn --pde heat-20d --reduced --steps 200 --batch 100
 """
 
 from __future__ import annotations
@@ -52,6 +55,126 @@ def build_train_step(cfg, optimizer, compress_pod_grads: bool = False):
     return step
 
 
+PINN_ARCHS = ("hjb-pinn", "tensor-pinn")
+
+
+def train_pinn(args):
+    """BP-free PINN training on a registered PDE workload (paper §3–§4).
+
+    ZO-signSGD by default — the paper's on-chip, forward-only algorithm —
+    through the fused multi-perturbation hot path (DESIGN.md §Perf) unless
+    ``--sequential`` requests the photonic-realism one-mesh-at-a-time order.
+    ``--optimizer adamw|sgd`` selects the off-chip BP baseline instead.
+    """
+    from repro.configs.hjb_pinn import pinn_config, pinn_reduced
+    from repro.core import pinn, zoo
+    from repro.data import pde_collocation_iterator
+
+    build = pinn_reduced if args.reduced else pinn_config
+    cfg = build(pde=args.pde, mode=args.pinn_mode, fused=not args.sequential,
+                noise=args.pinn_noise,
+                **({"hidden": args.hidden} if args.hidden else {}))
+    model = pinn.TensorPinn(cfg)
+    problem = model.problem
+    print(f"[pinn] pde={problem.name} in_dim={problem.in_dim} "
+          f"mode={cfg.mode} hidden={cfg.hidden} deriv={cfg.deriv} "
+          f"fused={cfg.use_fused_kernel}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    hw_noise = model.sample_noise(jax.random.fold_in(key, 99))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"[pinn] trainable params: {n_params}")
+    val = problem.sample_collocation(jax.random.fold_in(key, 1234), 1000) \
+        if problem.has_exact_solution else None
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=3,
+                                save_every=args.ckpt_every,
+                                async_save=args.async_ckpt)
+    watchdog = StragglerWatchdog(
+        on_straggle=lambda s: print(f"[watchdog] straggler at step {s.step}: "
+                                    f"{s.duration_s:.3f}s vs median "
+                                    f"{s.median_s:.3f}s"))
+
+    opt_name = args.optimizer or "zo-signsgd"
+    lr0 = args.lr or 2e-3
+    half_life = max(args.steps // 3, 1)
+
+    # both branches share the step signature (params, aux, xt, bc, lr_t) →
+    # (params, aux, loss) so one loop below owns watchdog/logging/checkpoints
+    if opt_name == "zo-signsgd":
+        scfg = zoo.SPSAConfig(num_samples=args.zo_samples, mu=0.01)
+        aux = zoo.ZOState.create(args.seed + 1)
+        aux_name = "zo"
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def step_fn(params, aux, xt, bc, lr_t):
+            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise, bc=bc)
+            blf = (None if args.sequential else
+                   lambda sp: pinn.residual_losses_stacked(
+                       model, sp, xt, hw_noise, bc=bc))
+            return zoo.zo_signsgd_step(lf, params, aux, lr=lr_t, cfg=scfg,
+                                       batched_loss_fn=blf)
+    else:
+        # off-chip BP baseline on the ideal (or noisy) model
+        opt = get_optimizer(opt_name, lr=args.lr)
+        aux = opt.init(params)
+        aux_name = "opt"
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def step_fn(params, aux, xt, bc, lr_t):
+            # lr_t unused: the BP optimizers carry their own schedule
+            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise, bc=bc)
+            loss, grads = jax.value_and_grad(lf)(params)
+            new_params, new_aux = opt.update(grads, aux, params)
+            return new_params, new_aux, loss
+
+    start_step = 0
+    if mgr and args.resume:
+        try:
+            restored, meta = mgr.restore_latest(
+                {"params": params, aux_name: aux})
+            params, aux = restored["params"], restored[aux_name]
+            start_step = meta["step"]
+            print(f"[resume] step {start_step}")
+        except FileNotFoundError:
+            pass
+
+    # restart-safe counter-based collocation stream (shared data pipeline)
+    colloc = pde_collocation_iterator(args.batch, seed=args.seed,
+                                      start_step=start_step, pde=args.pde)
+    for step in range(start_step, args.steps):
+        xt = next(colloc)
+        bc = (problem.boundary_batch(
+                  jax.random.fold_in(jax.random.fold_in(key, 8), step),
+                  max(args.batch // 4, 8))
+              if problem.has_boundary_loss else None)
+        watchdog.start_step()
+        params, aux, loss = step_fn(params, aux, xt, bc,
+                                    lr0 * 0.5 ** (step / half_life))
+        st = watchdog.end_step(step)
+        if step % args.log_every == 0:
+            msg = f"step {step} loss {float(loss):.4e} ({st.duration_s:.2f}s)"
+            if val is not None:
+                msg += (" val MSE "
+                        f"{float(pinn.validation_mse(model, params, val, hw_noise)):.4e}")
+            print(msg)
+        if mgr and mgr.should_save(step):
+            mgr.save(step, {"params": params, aux_name: aux}, {"step": step})
+
+    if mgr:
+        mgr.save(args.steps, {"params": params, aux_name: aux},
+                 {"step": args.steps})
+        mgr.wait()
+    if val is not None:
+        print(f"[pinn] final val MSE "
+              f"{float(pinn.validation_mse(model, params, val, hw_noise)):.4e}")
+    print("[train] done")
+    return params
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -73,7 +196,24 @@ def main(argv=None):
                          "(TPU/CPU fast path; a photonic chip is serial)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    # PINN-only flags (--arch hjb-pinn / tensor-pinn)
+    ap.add_argument("--pde", default="hjb-20d",
+                    help="registered PDE workload (repro.pde.available())")
+    ap.add_argument("--pinn-mode", default="tonn",
+                    choices=["dense", "onn", "tt", "tonn"])
+    ap.add_argument("--hidden", type=int, default=None,
+                    help="override the PINN hidden width")
+    ap.add_argument("--zo-samples", type=int, default=10,
+                    help="N SPSA perturbations per ZO step (paper: 10)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="photonic-realism order: one perturbed mesh at a "
+                         "time instead of the fused stacked program")
+    ap.add_argument("--pinn-noise", action="store_true",
+                    help="enable the fabrication-noise model (on-chip rows)")
     args = ap.parse_args(argv)
+
+    if args.arch in PINN_ARCHS:
+        return train_pinn(args)
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))

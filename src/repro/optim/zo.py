@@ -34,7 +34,7 @@ def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],
 
     ``vectorized`` batches the N perturbed loss evaluations (generic vmap);
     ``batched_loss_fn`` supplies a fused stacked-params evaluator (e.g. the
-    PINN's ``hjb_residual_losses_stacked`` → one stacked TT-kernel launch
+    PINN's ``residual_losses_stacked`` → one stacked TT-kernel launch
     for all perturbations).  Both compose with sharding.
     """
     cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu,

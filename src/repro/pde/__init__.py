@@ -1,0 +1,27 @@
+"""PDE problem registry: name-keyed workloads for the tensorized BP-free
+PINN solver stack (DESIGN.md §PDE).
+
+Importing this package registers the built-in workload suite:
+
+  * ``hjb-20d`` / ``hjb-10d``       — the paper's HJB benchmark (Eq. 7),
+  * ``heat-10d`` / ``heat-20d``     — heat equation, Gaussian exact solution,
+  * ``black-scholes-100d``          — 100-dim Black–Scholes–Barenblatt,
+  * ``helmholtz-2d``                — steady Helmholtz with a Dirichlet
+                                      boundary loss (paper Eq. 4's L_b).
+
+``get_problem(name)`` resolves a name to a fresh ``PDEProblem``;
+``available()`` lists the registry.
+"""
+
+from repro.pde.base import (PDEProblem, available, estimate_from_u_stencil,
+                            fd_stencil_points, get_problem, register)
+from repro.pde import black_scholes, heat, helmholtz, hjb  # noqa: F401 (register)
+from repro.pde.black_scholes import BlackScholesProblem
+from repro.pde.heat import HeatProblem
+from repro.pde.helmholtz import HelmholtzProblem
+from repro.pde.hjb import HJBProblem
+
+__all__ = ["PDEProblem", "register", "get_problem", "available",
+           "fd_stencil_points", "estimate_from_u_stencil",
+           "HJBProblem", "HeatProblem", "BlackScholesProblem",
+           "HelmholtzProblem"]

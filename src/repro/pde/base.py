@@ -1,0 +1,170 @@
+"""PDE problem interface + registry — the workload layer of the solver stack.
+
+The paper's framework (tensorized, BP-free PINN training) is
+problem-agnostic: the model (``repro.core.pinn.TensorPinn``), the BP-free
+derivative estimators (``repro.core.stein``) and the ZO optimizer
+(``repro.core.zoo``) never need to know which PDE they are solving.  A
+``PDEProblem`` packages everything that IS problem-specific:
+
+  * the collocation domain and sampler,
+  * the hard-constraint ansatz transform ``u = T(f, xt)`` that bakes the
+    terminal/initial condition into the network output,
+  * the pointwise residual as a function of a ``DerivativeEstimate``
+    (paper Eq. 4's L_r integrand),
+  * an optional boundary term (paper Eq. 4's L_b: sampler + target + weight),
+  * an optional closed-form exact solution (validation MSE + tests).
+
+Contract for the fused multi-perturbation ZO hot path (DESIGN.md §PDE):
+``ansatz`` and ``residual`` must be pure jnp functions that broadcast over
+arbitrary *leading* axes of the network values ``f`` / the estimate leaves —
+the stacked evaluator feeds them ``(P, ...)``-shaped values for all P SPSA
+perturbations at once, and the FD stencil transform feeds ``(2·Din+1, B)``
+values against ``(2·Din+1, B, in_dim)`` points.  Problems that satisfy this
+get the densify-once / stacked-TT-contraction / shared-stencil path for
+free; nothing else about the kernel plumbing is problem-specific.
+
+Register with the module-level decorator::
+
+    @register("heat-20d")
+    def _make() -> PDEProblem:
+        return HeatProblem(space_dim=20)
+
+and resolve by name: ``get_problem("heat-20d")``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stein
+
+__all__ = ["PDEProblem", "register", "get_problem", "available",
+           "fd_stencil_points", "estimate_from_u_stencil"]
+
+
+class PDEProblem:
+    """Base class: one PDE workload for the tensorized BP-free PINN stack.
+
+    Subclasses set the class/instance attributes and implement the four
+    methods below.  ``residual_tol`` documents the problem's FD noise floor:
+    the mean-squared residual of the *exact* solution under the float32
+    central-difference estimator at ``fd_step`` (truncation h²·u⁗/12 plus
+    rounding ε·|u|/h², summed over the Laplacian) — tests assert it.
+    """
+
+    name: str = ""
+    space_dim: int = 0
+    time_dependent: bool = True   # input is (x, t); False → input is x only
+    has_boundary_loss: bool = False
+    bc_weight: float = 1.0        # λ in L = L_r + λ·L_b (paper Eq. 4)
+    fd_step: float = 1e-2         # recommended FD step for this problem
+    residual_tol: float = 5e-2    # documented FD noise floor (see above)
+
+    @property
+    def in_dim(self) -> int:
+        return self.space_dim + (1 if self.time_dependent else 0)
+
+    # ------------------------------------------------------------- interface
+    def sample_collocation(self, key: jax.Array, n: int) -> jax.Array:
+        """(n, in_dim) interior points, margined so FD stencils stay inside
+        the domain (and away from any kinks of the ansatz)."""
+        raise NotImplementedError
+
+    def ansatz(self, f: jax.Array, xt: jax.Array) -> jax.Array:
+        """Hard-constraint transform u = T(f, xt).
+
+        ``xt``: (..., in_dim) points; ``f``: network values broadcastable
+        against ``xt[..., 0]`` — possibly with EXTRA leading axes (the
+        stacked perturbation axis P).  Must be elementwise-cheap pure jnp.
+        """
+        raise NotImplementedError
+
+    def residual(self, est: stein.DerivativeEstimate,
+                 xt: jax.Array) -> jax.Array:
+        """Pointwise PDE residual (B,) from a derivative estimate of u."""
+        raise NotImplementedError
+
+    def boundary_batch(self, key: jax.Array, n: int):
+        """(xb, ub) boundary points + target values for L_b, or None.
+
+        Only meaningful when ``has_boundary_loss``; the trainer samples a
+        fresh batch per step and the loss adds
+        ``bc_weight · mean((u(xb) − ub)²)``.
+        """
+        return None
+
+    def exact_solution(self, xt: jax.Array) -> jax.Array | None:
+        """Closed-form u(xt) for validation, or None if unknown."""
+        return None
+
+    @property
+    def has_exact_solution(self) -> bool:
+        return type(self).exact_solution is not PDEProblem.exact_solution
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"{type(self).__name__}(name={self.name!r}, "
+                f"space_dim={self.space_dim})")
+
+
+# ---------------------------------------------------------------- FD helpers
+
+def fd_stencil_points(xt: jax.Array, h: float) -> jax.Array:
+    """(2D+1, B, D) central-difference stencil
+    [x, x+h·e_1, ..., x+h·e_D, x−h·e_1, ..., x−h·e_D] of ``stein.fd_estimate``
+    — the point layout every stencil evaluator in the repo shares."""
+    B, D = xt.shape
+    eye = jnp.eye(D, dtype=xt.dtype) * jnp.asarray(h, dtype=xt.dtype)
+    plus = xt[None, :, :] + eye[:, None, :]
+    minus = xt[None, :, :] - eye[:, None, :]
+    return jnp.concatenate([xt[None], plus, minus], axis=0)
+
+
+def estimate_from_u_stencil(vals: jax.Array, h: float
+                            ) -> stein.DerivativeEstimate:
+    """Assemble (u, ∇u, diag H) from u-values on the central-difference
+    stencil: vals (2D+1, B) → DerivativeEstimate with (B, D) leaves."""
+    D = (vals.shape[0] - 1) // 2
+    u0, up, um = vals[0], vals[1:D + 1], vals[D + 1:]
+    return stein.DerivativeEstimate(
+        u=u0,
+        grad=((up - um) / (2.0 * h)).T,
+        hess_diag=((up - 2.0 * u0[None] + um) / (h * h)).T)
+
+
+def uniform_box(key: jax.Array, n: int, dim: int, lo: float,
+                hi: float) -> jax.Array:
+    """Uniform sample in [lo, hi]^dim — the common collocation primitive."""
+    return jax.random.uniform(key, (n, dim), minval=lo, maxval=hi)
+
+
+# ------------------------------------------------------------------ registry
+
+_REGISTRY: dict[str, Callable[[], PDEProblem]] = {}
+
+
+def register(name: str):
+    """Decorator: register a zero-arg factory under ``name``."""
+    def deco(factory: Callable[[], PDEProblem]):
+        if name in _REGISTRY:
+            raise ValueError(f"PDE {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_problem(name: str) -> PDEProblem:
+    """Instantiate the registered problem ``name`` (fresh instance)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown PDE {name!r}; known: {sorted(_REGISTRY)}")
+    prob = _REGISTRY[name]()
+    if not prob.name:
+        prob.name = name
+    return prob
+
+
+def available() -> tuple:
+    """Registered problem names, sorted."""
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,75 @@
+"""The paper's 20-dim Hamilton–Jacobi–Bellman benchmark (paper Eq. 7, §4).
+
+    ∂_t u + Δu − λ ‖∇_x u‖₂² = −2,   λ = 1/D (paper: 0.05 at D = 20),
+    u(x, 1) = ‖x‖₁,  x ∈ [0,1]^D, t ∈ [0,1];   exact: u = ‖x‖₁ + 1 − t.
+
+The ansatz  u = (1−t)·f + ‖x‖₁  satisfies the terminal condition exactly,
+so training minimizes the residual loss alone (no L_b term).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stein
+from repro.pde import base
+
+
+class HJBProblem(base.PDEProblem):
+    """Paper Eq. 7 in ``space_dim`` spatial dimensions (paper: 20)."""
+
+    time_dependent = True
+    has_boundary_loss = False
+    # float32 FD second derivatives carry ~ε·|u|/h² rounding per dim, summed
+    # over D Laplacian terms (the seed's exact-solution test bound).
+    residual_tol = 5e-2
+
+    def __init__(self, space_dim: int = 20, margin: float = 0.02):
+        self.space_dim = space_dim
+        self.name = f"hjb-{space_dim}d"
+        self.margin = margin
+        # Eq. 7's 0.05 is 1/D at the paper's D=20: the exact solution
+        # u = ‖x‖₁ + 1 − t has u_t = −1, Δu = 0, ‖∇u‖² = D, so the residual
+        # −1 − λD + 2 vanishes iff λ = 1/D.  Generalizing keeps the same
+        # closed form at every dimension.
+        self.lam = 1.0 / space_dim
+
+    def sample_collocation(self, key: jax.Array, n: int) -> jax.Array:
+        """Uniform (x, t) ∈ [margin, 1−margin]^D × [margin, 1−margin].
+
+        The margin keeps FD stencils away from the |x| kink at 0 and the
+        domain boundary (the exact solution is smooth inside).
+        """
+        return base.uniform_box(key, n, self.in_dim,
+                                self.margin, 1.0 - self.margin)
+
+    def ansatz(self, f: jax.Array, xt: jax.Array) -> jax.Array:
+        """u = (1−t)·f + ‖x‖₁ (terminal condition exact)."""
+        x, t = xt[..., :-1], xt[..., -1]
+        return (1.0 - t) * f + jnp.sum(jnp.abs(x), axis=-1)
+
+    def residual(self, est: stein.DerivativeEstimate,
+                 xt: jax.Array) -> jax.Array:
+        """Paper Eq. 7: residual = u_t + Δ_x u − λ ‖∇_x u‖² + 2, λ = 1/D
+        (= the paper's 0.05 at D=20)."""
+        D = self.space_dim
+        u_t = est.grad[..., D]
+        grad_x = est.grad[..., :D]
+        lap = jnp.sum(est.hess_diag[..., :D], axis=-1)
+        return u_t + lap - self.lam * jnp.sum(grad_x * grad_x, axis=-1) + 2.0
+
+    def exact_solution(self, xt: jax.Array) -> jax.Array:
+        """u(x,t) = ‖x‖₁ + 1 − t."""
+        x, t = xt[..., :-1], xt[..., -1]
+        return jnp.sum(jnp.abs(x), axis=-1) + 1.0 - t
+
+
+@base.register("hjb-20d")
+def _hjb_20d() -> HJBProblem:
+    return HJBProblem(space_dim=20)
+
+
+@base.register("hjb-10d")
+def _hjb_10d() -> HJBProblem:
+    return HJBProblem(space_dim=10)
