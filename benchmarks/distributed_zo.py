@@ -1,0 +1,242 @@
+"""Distributed ZO training benchmark: the SPSA sweep sharded over a device
+mesh (``repro.parallel.zo_shard``, DESIGN.md §Distributed).
+
+Three measurements, emitted as ``BENCH_distributed_zo.json``:
+
+  * **layouts** — per-step wall time of the distributed ZO-signSGD step at
+    the paper's 20-dim HJB config across mesh layouts (single-device fused
+    baseline, perturbation-sharded, batch-sharded, both).  NOTE: on CI the
+    "devices" are forced host-platform CPU devices sharing the same cores,
+    so wall-time parity — not speedup — is the expectation there; the
+    numbers track layout overhead.  On real multi-chip hardware the sweep
+    parallelizes (the per-device work drops by the axis sizes while the
+    wire stays O(N) scalars).
+  * **traffic** — per-device bytes-on-wire per step, measured from the
+    compiled SPMD HLO (every collective's result size,
+    ``zo_shard.measure_collective_bytes``), asserted against the O(N)-scalar
+    bound: one psum of the padded (N+1)-vector plus one pmean of the local
+    slice — and asserted ≪ the size of the parameter pytree (the paper's
+    claim: ZO training never moves parameters).
+  * **identity** — for every registered PDE problem, the distributed
+    gradient on the full 8-device mesh vs the single-device fused
+    ``zoo.spsa_gradient`` with the same seed (same ξ): max abs deviation
+    relative to the gradient scale must sit at the float32 floor
+    (perturbation sharding is bit-identical; batch sharding adds ~1e-7
+    batch-mean reassociation — DESIGN.md §Distributed).
+
+Forces ``--xla_force_host_platform_device_count=8`` (override with
+``REPRO_DIST_DEVICES``) as its first import, like ``launch/dryrun.py``.
+
+    PYTHONPATH=src python benchmarks/distributed_zo.py --ci
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DIST_DEVICES", "8")
+    + " " + os.environ.get("XLA_FLAGS", ""))
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import pde as pde_lib          # noqa: E402
+from repro.core import pinn, zoo          # noqa: E402
+from repro.parallel import zo_shard       # noqa: E402
+
+GRAD_IDENTITY_TOL = 1e-4   # relative to the gradient scale (f32 floor)
+GRAD_IDENTITY_ATOL = 1e-5  # absolute floor: problems whose gradients sit
+#                            near zero (helmholtz-2d at CI scale measures
+#                            |g|~8e-3) would otherwise fail on f32-epsilon
+#                            deviations that are meaningless for sign(g)
+
+
+def _setup(pde: str, hidden: int, batch: int, num_samples: int,
+           seed: int = 0):
+    cfg = pinn.PINNConfig(hidden=hidden, mode="tonn", tt_L=3, pde=pde,
+                          deriv="fd_fast", use_fused_kernel=True)
+    model = pinn.TensorPinn(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    xt = model.problem.sample_collocation(jax.random.fold_in(key, 1), batch)
+    scfg = zoo.SPSAConfig(num_samples=num_samples, mu=0.01)
+    blf = lambda sp, x, bc: pinn.residual_losses_stacked(model, sp, x, bc=bc)
+    return model, params, xt, scfg, blf, jax.random.fold_in(key, 2)
+
+
+def _median_step_ms(step, params, state, xt, repeats: int) -> float:
+    p, s = params, state
+    p, s, loss = step(p, s, xt, None, 1e-3)   # compile
+    jax.block_until_ready(loss)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        p, s, loss = step(p, s, xt, None, 1e-3)
+        jax.block_until_ready(loss)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e3
+
+
+def bench_layouts(pde: str, hidden: int, batch: int, num_samples: int,
+                  repeats: int) -> list:
+    """Step time + measured wire bytes per mesh layout."""
+    n_dev = len(jax.devices())
+    model, params, xt, scfg, blf, _ = _setup(pde, hidden, batch, num_samples)
+    n_param_bytes = 4 * sum(int(np.prod(x.shape))
+                            for x in jax.tree.leaves(params))
+
+    # layouts derived from the actual device count and batch divisibility
+    # (run.py calls this from processes with as few as 2 devices)
+    layouts = [("single", None, None), ("1x1", "1x1", "perturbation")]
+    for p in sorted({p for p in (2, 4, n_dev) if 1 < p <= n_dev}):
+        layouts.append((f"pert {p}x1", f"{p}x1", "perturbation"))
+    if n_dev > 1 and batch % n_dev == 0:
+        layouts.append((f"batch 1x{n_dev}", f"1x{n_dev}", "batch"))
+    if n_dev >= 4 and batch % 2 == 0:
+        layouts.append((f"both {n_dev // 2}x2", f"{n_dev // 2}x2", "both"))
+    rows = []
+    for name, spec, shard in layouts:
+        state = zoo.ZOState.create(1)
+        if spec is None:
+            # single-device fused baseline (PR-1 hot path, no shard_map)
+            def base_step(p, s, x, bc, lr):
+                lf = lambda q: pinn.residual_loss(model, q, x)
+                return zoo.zo_signsgd_step(
+                    lf, p, s, lr=lr, cfg=scfg,
+                    batched_loss_fn=lambda sp: pinn.residual_losses_stacked(
+                        model, sp, x))
+            step = jax.jit(base_step)
+            traffic = {"bytes": 0, "ops": []}
+            npert, nbatch = 1, 1
+        else:
+            mesh = zo_shard.make_zo_mesh(spec, shard)
+            npert = int(mesh.shape[zo_shard.PERT_AXIS])
+            nbatch = int(mesh.shape[zo_shard.BATCH_AXIS])
+            step = zo_shard.make_distributed_zo_step(mesh, blf, scfg,
+                                                     donate=False)
+            traffic = zo_shard.measure_collective_bytes(
+                step, params, state, xt, None, 1e-3)
+        ms = _median_step_ms(step, params, state, xt, repeats)
+        bound = zo_shard.wire_bound_bytes(num_samples, npert)
+        rows.append({
+            "layout": name, "pert": npert, "batch_shards": nbatch,
+            "devices": npert * nbatch,
+            "step_ms": round(ms, 2),
+            "wire_bytes_per_step": traffic["bytes"],
+            "wire_bound_bytes": bound,
+            "param_bytes": n_param_bytes,
+            "collectives": [f"{op} {shapes.strip()}"
+                            for op, shapes, _ in traffic["ops"]],
+        })
+        assert traffic["bytes"] <= bound, (name, traffic)
+        assert traffic["bytes"] < n_param_bytes, \
+            f"parameter-sized transfer in {name}: {traffic}"
+    return rows
+
+
+def bench_identity(hidden: int, batch: int, num_samples: int) -> list:
+    """Distributed vs single-device fused gradient, every registered PDE."""
+    n_dev = len(jax.devices())
+    rows = []
+    for pde in pde_lib.available():
+        model, params, xt, scfg, blf, key = _setup(pde, hidden, batch,
+                                                   num_samples)
+        lf = lambda p: pinn.residual_loss(model, p, xt)
+        g_ref, base_ref = jax.jit(
+            lambda p, k: zoo.spsa_gradient(
+                lf, p, k, scfg,
+                batched_loss_fn=lambda sp: pinn.residual_losses_stacked(
+                    model, sp, xt)))(params, key)
+        scale = max(float(jnp.max(jnp.abs(l)))
+                    for l in jax.tree.leaves(g_ref))
+        row = {"pde": pde, "grad_scale": round(scale, 4)}
+        for spec, shard in [(f"{n_dev}x1", "perturbation"),
+                            (f"{n_dev // 2}x2", "both")]:
+            mesh = zo_shard.make_zo_mesh(spec, shard)
+            grad_fn = zo_shard.make_distributed_spsa_gradient(mesh,
+                                                              lambda sp, x:
+                                                              blf(sp, x, None),
+                                                              scfg)
+            g, _ = grad_fn(params, key, xt)
+            err = max(float(jnp.max(jnp.abs(a - b)))
+                      for a, b in zip(jax.tree.leaves(g),
+                                      jax.tree.leaves(g_ref)))
+            row[f"abs_err_{spec}"] = err
+            row[f"rel_err_{spec}"] = err / (scale + 1e-30)
+        row["identity"] = bool(
+            max(v for k, v in row.items() if k.startswith("abs_err"))
+            < GRAD_IDENTITY_TOL * scale + GRAD_IDENTITY_ATOL)
+        rows.append(row)
+    return rows
+
+
+def run(hidden: int = 1024, batch: int = 96, num_samples: int = 10,
+        repeats: int = 3, pde: str = "hjb-20d",
+        id_hidden: int = 32, id_batch: int = 64, id_samples: int = 6) -> dict:
+    return {
+        "config": {"pde": pde, "hidden": hidden, "batch": batch,
+                   "num_samples": num_samples,
+                   "devices": len(jax.devices()),
+                   "backend": jax.default_backend(),
+                   "note": ("forced host devices share CPU cores: expect "
+                            "wall-time parity, not speedup, on CI")},
+        "layouts": bench_layouts(pde, hidden, batch, num_samples, repeats),
+        "identity": bench_identity(id_hidden, id_batch, id_samples),
+    }
+
+
+def summarize(result: dict) -> list:
+    """Rows for benchmarks/run.py's CSV."""
+    out = []
+    for r in result["layouts"]:
+        out.append({
+            "name": f"distributed_zo/{r['layout'].replace(' ', '_')}",
+            "us_per_call": round(r["step_ms"] * 1e3, 1),
+            "derived": (f"wire={r['wire_bytes_per_step']}B "
+                        f"(bound {r['wire_bound_bytes']}B, "
+                        f"params {r['param_bytes']}B)"),
+        })
+    worst = max((max(v for k, v in r.items() if k.startswith("rel_err"))
+                 for r in result["identity"]), default=0.0)
+    out.append({"name": "distributed_zo/identity",
+                "us_per_call": "",
+                "derived": f"{len(result['identity'])} PDEs, "
+                           f"worst_rel_err={worst:.1e}"})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="container-sized budget (hidden 64, batch 32)")
+    ap.add_argument("--pde", default="hjb-20d")
+    ap.add_argument("--hidden", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=96,
+                    help="global collocation batch (divisible by the batch "
+                         "axis; paper uses 100)")
+    ap.add_argument("--num-samples", type=int, default=10)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_distributed_zo.json")
+    args = ap.parse_args()
+
+    hidden, batch = (64, 32) if args.ci else (args.hidden, args.batch)
+    result = run(hidden=hidden, batch=batch, num_samples=args.num_samples,
+                 repeats=args.repeats, pde=args.pde)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    for r in result["identity"]:
+        assert r["identity"], f"gradient identity violated: {r}"
+    print(f"[distributed_zo] {len(result['layouts'])} layouts, "
+          f"{len(result['identity'])} PDE identity checks OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     short ZO training per registered problem)
   * kernels/*     — tt_contract + flash_attention vs refs (CPU wall time;
                     derived = max |err| vs oracle)
+  * distributed_zo/* — sharded SPSA sweep: per-layout step time + measured
+                    bytes-on-wire vs the O(N)-scalar bound (needs a
+                    multi-device process; the standalone script forces 8)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
                     fraction; run launch/dryrun.py first to populate)
 """
@@ -67,6 +70,22 @@ def bench_zo_step(rows):
     rows += zo_step.summarize(result)
 
 
+def bench_distributed_zo(rows):
+    """Distributed ZO over the forced-host mesh: per-layout step time,
+    bytes-on-wire vs the O(N)-scalar bound, per-PDE gradient identity.
+    Skipped unless the process already has >1 device (the XLA device count
+    locks on first jax use; run benchmarks/distributed_zo.py standalone
+    for the full sweep — it forces 8 host devices itself)."""
+    if len(jax.devices()) < 2:
+        rows.append({"name": "distributed_zo/skipped",
+                     "derived": "single-device process; run "
+                                "benchmarks/distributed_zo.py standalone"})
+        return
+    from benchmarks import distributed_zo
+    rows += distributed_zo.summarize(
+        distributed_zo.run(hidden=64, batch=32, repeats=2))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table1-epochs", type=int, default=300)
@@ -75,6 +94,9 @@ def main() -> None:
     ap.add_argument("--skip-zo-step", action="store_true",
                     help="skip the paper-scale fused-vs-naive ZO benchmark "
                          "(~2-4 min on a 2-core box)")
+    ap.add_argument("--skip-distributed-zo", action="store_true",
+                    help="skip the sharded-SPSA layout sweep (multi-device "
+                         "processes only; several shard_map compiles)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
@@ -83,6 +105,8 @@ def main() -> None:
     bench_kernels(rows)
     if not args.skip_zo_step:
         bench_zo_step(rows)
+    if not args.skip_distributed_zo:
+        bench_distributed_zo(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)

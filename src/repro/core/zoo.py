@@ -29,15 +29,23 @@ path remains selectable (``vectorized=False``, no ``batched_loss_fn``) for
 photonic-realism simulation: a real chip has ONE mesh and must run the N
 inferences serially.
 
-Distributed ZO (beyond-paper, DESIGN.md §2): the per-perturbation losses
-``L(Φ + μ ξ_i)`` are embarrassingly parallel and each is a *scalar*.  With a
-shared PRNG seed every worker regenerates all ξ_i locally, evaluates its own
-slice of perturbations, and a single ``psum`` of an N-vector of scalars
-reconstructs the exact same gradient estimate everywhere — per-step
-communication is O(N) scalars independent of model size.  This is the
-strongest possible "gradient compression" and is exposed both as a pure
-function (``spsa_gradient`` with ``index_shard``) and through
-``repro.optim.zo_signsgd``.
+Distributed ZO (beyond-paper, DESIGN.md §Distributed): the per-perturbation
+losses ``L(Φ + μ ξ_i)`` are embarrassingly parallel and each is a *scalar*.
+With a shared PRNG seed every worker regenerates all ξ_i locally, evaluates
+its own slice of perturbations, and a single ``psum`` of an N-vector of
+scalars reconstructs the exact same gradient estimate everywhere — per-step
+communication is O(N) scalars independent of model size, the strongest
+possible "gradient compression".  The end-to-end entry point is
+``repro.parallel.zo_shard``: ``make_distributed_zo_step`` runs this
+protocol under ``shard_map`` over an explicit ``("pert", "batch")`` mesh
+(perturbation and/or collocation-batch sharding, elastic resizing via
+``repro.runtime.elastic.ZOElasticController``, trainer flag
+``launch/train.py --shard``), built from this module's primitives:
+``sample_perturbations`` for the shared ξ stack and
+``spsa_gradient_from_losses`` for the local reconstruction.  The
+``index_shard``/``axis_name`` hooks on ``spsa_gradient``/``spsa_losses``
+below remain the single-axis building blocks for hand-rolled pmap/shard_map
+loops (static worker slices, e.g. ``repro.optim.zo_signsgd_trainer_step``).
 """
 
 from __future__ import annotations
@@ -208,6 +216,10 @@ def spsa_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
 
     With ``axis_name`` + ``index_shard`` set, runs the distributed-ZO
     protocol: local slice of perturbed losses → psum → identical grads.
+    (``index_shard`` bounds are static Python ints — for the mesh-level
+    version where each device derives its slice from ``lax.axis_index``,
+    with batch sharding and elastic resizing on top, use
+    ``repro.parallel.zo_shard.make_distributed_zo_step``.)
 
     With ``batched_loss_fn`` (or ``cfg.vectorized``) and no shard, the base
     loss rides along as perturbation 0 of the stacked evaluation, so one

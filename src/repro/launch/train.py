@@ -6,6 +6,10 @@ registered PDE workload (``--pde``, see ``repro.pde``) with:
 
   * pjit/GSPMD sharding over an explicit mesh (``--mesh dxm``, default =
     all local devices on the data axis),
+  * distributed BP-free ZO for the PINN archs (``--shard {perturbation,
+    batch,both}`` + ``--mesh PxB``): the SPSA sweep sharded over a
+    ('pert','batch') mesh with O(N)-scalar per-step traffic
+    (``repro.parallel.zo_shard``, DESIGN.md §Distributed),
   * AdamW / Adafactor / BP-free ZO-signSGD (``--optimizer``),
   * deterministic restart-safe data pipeline,
   * fault-tolerant checkpointing (atomic, keep-k, optional async) + resume,
@@ -102,9 +106,37 @@ def train_pinn(args):
     lr0 = args.lr or 2e-3
     half_life = max(args.steps // 3, 1)
 
+    if args.shard and opt_name != "zo-signsgd":
+        raise SystemExit(f"--shard is distributed ZO only "
+                         f"(got --optimizer {opt_name}); the BP baselines "
+                         "use the GSPMD mesh path of the LM archs instead")
+
     # both branches share the step signature (params, aux, xt, bc, lr_t) →
     # (params, aux, loss) so one loop below owns watchdog/logging/checkpoints
-    if opt_name == "zo-signsgd":
+    if opt_name == "zo-signsgd" and args.shard:
+        # distributed ZO: shard the SPSA sweep over an explicit mesh —
+        # per-step traffic is O(N) scalars, params never move (DESIGN.md
+        # §Distributed).  Requires the fused stacked evaluator.
+        from repro.parallel import zo_shard
+        if args.sequential:
+            raise SystemExit("--shard needs the stacked evaluator; "
+                             "drop --sequential")
+        mesh = zo_shard.make_zo_mesh(args.mesh, args.shard)
+        npert, nbatch = mesh.shape["pert"], mesh.shape["batch"]
+        if args.batch % nbatch:
+            raise SystemExit(f"--batch {args.batch} not divisible by the "
+                             f"{nbatch}-way batch axis")
+        print(f"[pinn] distributed ZO mesh pert={npert} batch={nbatch} "
+              f"(shard={args.shard})")
+        scfg = zoo.SPSAConfig(num_samples=args.zo_samples, mu=0.01)
+        aux = zoo.ZOState.create(args.seed + 1)
+        aux_name = "zo"
+        step_fn = zo_shard.make_distributed_zo_step(
+            mesh,
+            lambda sp, xt, bc: pinn.residual_losses_stacked(
+                model, sp, xt, hw_noise, bc=bc),
+            scfg)
+    elif opt_name == "zo-signsgd":
         scfg = zoo.SPSAConfig(num_samples=args.zo_samples, mu=0.01)
         aux = zoo.ZOState.create(args.seed + 1)
         aux_name = "zo"
@@ -185,7 +217,9 @@ def main(argv=None):
     ap.add_argument("--optimizer", default=None,
                     choices=[None, "adamw", "adafactor", "sgd", "zo-signsgd"])
     ap.add_argument("--lr", type=float, default=None)
-    ap.add_argument("--mesh", default=None, help="DATAxMODEL, e.g. 4x2")
+    ap.add_argument("--mesh", default=None,
+                    help="LM archs: DATAxMODEL (e.g. 4x2). PINN archs with "
+                         "--shard: PERTxBATCH for the distributed ZO mesh")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--async-ckpt", action="store_true")
@@ -208,12 +242,21 @@ def main(argv=None):
     ap.add_argument("--sequential", action="store_true",
                     help="photonic-realism order: one perturbed mesh at a "
                          "time instead of the fused stacked program")
+    ap.add_argument("--shard", default=None,
+                    choices=["perturbation", "batch", "both"],
+                    help="distributed ZO over a ('pert','batch') device "
+                         "mesh: shard the SPSA sweep, the collocation "
+                         "batch, or both (repro.parallel.zo_shard; O(N)-"
+                         "scalar traffic per step)")
     ap.add_argument("--pinn-noise", action="store_true",
                     help="enable the fabrication-noise model (on-chip rows)")
     args = ap.parse_args(argv)
 
     if args.arch in PINN_ARCHS:
         return train_pinn(args)
+    if args.shard:
+        raise SystemExit("--shard (distributed ZO mesh) is PINN-only; "
+                         "LM archs shard via --mesh DATAxMODEL")
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))

@@ -1,5 +1,6 @@
 from repro.optim.optimizers import (  # noqa: F401
     Optimizer, adamw, adafactor, sgd, get_optimizer)
-from repro.optim.zo import zo_signsgd_trainer_step  # noqa: F401
+from repro.optim.zo import (  # noqa: F401
+    zo_signsgd_trainer_step, distributed_zo_signsgd_step)
 from repro.optim.compression import (  # noqa: F401
     sign_compress_grads, mean_abs_scale)

@@ -7,6 +7,13 @@ regenerated from the step key.  With ``axis_name`` set (inside shard_map or
 pmap) the distributed-ZO protocol from ``repro.core.zoo`` kicks in: each
 worker evaluates a slice of the N perturbations and the ONLY cross-worker
 traffic is the psum of an N-vector of scalar losses.
+
+``distributed_zo_signsgd_step`` is the mesh-level version of that protocol:
+it owns the whole ``shard_map`` (perturbation and/or collocation-batch
+sharding over an explicit two-axis mesh, ``repro.parallel.zo_shard``) and
+returns a jitted ``(params, state, xt, bc, lr) -> (params, state, loss)``
+step — the distributed counterpart of ``zoo.zo_signsgd_step`` with the same
+update semantics (DESIGN.md §Distributed).
 """
 
 from __future__ import annotations
@@ -19,6 +26,27 @@ import jax.numpy as jnp
 from repro.core import zoo
 
 PyTree = Any
+
+
+def distributed_zo_signsgd_step(mesh, batched_loss_fn: Callable,
+                                num_samples: int = 10, mu: float = 1e-2,
+                                sign_update: bool = True,
+                                donate: bool = True) -> Callable:
+    """Build the distributed ZO-signSGD step for ``mesh``.
+
+    ``mesh`` is a ``("pert", "batch")`` mesh (``zo_shard.make_zo_mesh``);
+    ``batched_loss_fn(stacked_params, xt, bc) -> (P,) losses`` evaluates a
+    stacked params pytree on (possibly batch-sharded) collocation points —
+    e.g. the PINN's fused ``residual_losses_stacked``.  Per step the only
+    cross-device traffic is O(N) scalar losses; parameters never move
+    (DESIGN.md §Distributed).  Rebuild with a different mesh to resize
+    elastically (``repro.runtime.elastic.ZOElasticController``).
+    """
+    from repro.parallel import zo_shard
+    cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu,
+                         sign_update=sign_update)
+    return zo_shard.make_distributed_zo_step(mesh, batched_loss_fn, cfg,
+                                             donate=donate)
 
 
 def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],

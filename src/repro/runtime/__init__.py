@@ -1,2 +1,3 @@
 from repro.runtime.watchdog import StragglerWatchdog, StepStats  # noqa: F401
-from repro.runtime.elastic import ElasticController  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    ElasticController, ZOElasticController)

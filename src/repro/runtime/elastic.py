@@ -1,4 +1,19 @@
-"""Elastic scaling controller: checkpoint-restore across mesh sizes.
+"""Elastic scaling controllers: checkpoint-restore across mesh sizes.
+
+Two controllers for the two training regimes:
+
+  * ``ElasticController`` — BP training of sharded LM params: restored
+    arrays must be re-placed per the sharding rules of the new mesh.
+  * ``ZOElasticController`` — distributed BP-free ZO training
+    (``repro.parallel.zo_shard``): parameters are REPLICATED (the protocol
+    shards work — perturbation indices and collocation batches — never
+    state), so a device-count change needs no re-sharding at all.  Resizing
+    is: take the newest checkpoint, rebuild the step for the new mesh (the
+    per-device perturbation slice re-resolves from the new ``"pert"`` axis
+    size inside ``zo_shard``), resume — the loss trajectory continues as if
+    the mesh had never changed, because the gradient is layout-invariant
+    (DESIGN.md §Distributed; tested 8 → 4 devices in
+    tests/test_distribution.py).
 
 Failure model: a pod (or any device subset) drops; the job must resume on
 the surviving mesh without operator intervention.  The controller owns the
@@ -43,3 +58,30 @@ class ElasticController:
         step_fn = self.build_step(mesh)
         return mesh, step_fn, params, {"meta": meta,
                                        "fallbacks": report.fallbacks}
+
+
+@dataclasses.dataclass
+class ZOElasticController:
+    """Elastic controller for distributed ZO training (replicated params).
+
+    ``make_mesh(n_devices)`` builds the ``("pert", "batch")`` mesh for the
+    surviving device count (e.g. ``lambda n: zo_shard.make_zo_mesh(str(n))``)
+    and ``build_step(mesh)`` re-jits the distributed step for it
+    (``zo_shard.make_distributed_zo_step`` / the trainer's step builder).
+    No remesh pass is needed: checkpoints hold full replicated arrays and
+    the new step replicates them onto the new mesh on first call.
+    """
+    ckpt: "CheckpointManager"
+    make_mesh: Callable[[int], Any]        # n_devices -> ("pert","batch") Mesh
+    build_step: Callable[[Any], Callable]  # mesh -> jitted distributed step
+
+    def resume(self, n_devices: int, tree_like: PyTree) -> tuple:
+        """Rebuild on ``n_devices``; returns (mesh, step_fn, tree, meta).
+
+        ``tree_like`` matches what the trainer checkpoints — typically
+        ``{"params": params, "zo": ZOState}``; the restored tree comes back
+        as host arrays ready to feed the rebuilt step.
+        """
+        mesh = self.make_mesh(n_devices)
+        tree, meta = self.ckpt.restore_latest(tree_like)
+        return mesh, self.build_step(mesh), tree, meta

@@ -171,3 +171,154 @@ else:
             jnp.zeros((8, 1)))
         np.testing.assert_allclose(np.asarray(g[0] if g.ndim > 1 else g),
                                    np.asarray(g_ref["w"]), rtol=1e-5)
+
+    # ------------------------------------------------ distributed ZO (mesh)
+    # repro.parallel.zo_shard: the SPSA sweep sharded end to end over an
+    # explicit ("pert", "batch") mesh — gradient identity across every
+    # layout, O(N)-scalar traffic, elastic 8 → 4 resume.
+
+    from repro.core import pinn as pinn_lib
+    from repro.parallel import zo_shard
+
+    # 1×, 2×, and 8× devices; perturbation, batch, and both axes.  N=6 makes
+    # n_total=7 indivisible by 2/4/8, exercising the zero-padded slices.
+    ZO_LAYOUTS = [("1x1", "perturbation"), ("2x1", "perturbation"),
+                  ("8x1", "perturbation"), ("1x2", "batch"), ("1x8", "batch"),
+                  ("2x2", "both"), ("4x2", "both"), ("2x4", "both")]
+
+    def _quad_batched_loss(target):
+        def blf(sp, xt):
+            d = sp["w"][:, None, :] - target[None, None, :] \
+                + 0.0 * xt[None, :, :1]
+            return jnp.mean(jnp.sum(d * d, axis=-1), axis=-1)
+        return blf
+
+    def test_zo_shard_gradient_identity_all_layouts():
+        """Every mesh layout must reproduce the single-device fused SPSA
+        gradient (pure perturbation sharding: bit-identical; batch sharding:
+        f32 batch-mean reassociation only)."""
+        target = jnp.asarray(
+            np.random.RandomState(0).randn(16).astype(np.float32))
+        params = {"w": jnp.zeros(16)}
+        cfg = zoo.SPSAConfig(num_samples=6, mu=1e-2)
+        key = jax.random.PRNGKey(3)
+        xt = jax.random.normal(jax.random.PRNGKey(5), (16, 4))
+        blf = _quad_batched_loss(target)
+        lf = lambda p: jnp.sum((p["w"] - target) ** 2)
+        g_ref, base_ref = jax.jit(
+            lambda p, k: zoo.spsa_gradient(
+                lf, p, k, cfg, batched_loss_fn=lambda sp: blf(sp, xt))
+        )(params, key)
+        for spec, shard in ZO_LAYOUTS:
+            mesh = zo_shard.make_zo_mesh(spec, shard)
+            grad_fn = zo_shard.make_distributed_spsa_gradient(mesh, blf, cfg)
+            g, base = grad_fn(params, key, xt)
+            np.testing.assert_allclose(
+                np.asarray(g["w"]), np.asarray(g_ref["w"]),
+                rtol=1e-4, atol=1e-4 * float(jnp.max(jnp.abs(g_ref["w"]))),
+                err_msg=f"layout {spec} ({shard})")
+            np.testing.assert_allclose(float(base), float(base_ref),
+                                       rtol=1e-5, err_msg=spec)
+
+    def _pinn_setup(pde="hjb-10d", hidden=32, batch=64, n=6, seed=0):
+        # batch 64 keeps ≥8 collocation points per device on the 8-way
+        # batch axis — the bit-stability threshold of the stacked
+        # evaluator's GEMMs (DESIGN.md §Distributed)
+        cfg = pinn_lib.PINNConfig(hidden=hidden, mode="tonn", tt_L=3,
+                                  pde=pde, deriv="fd_fast",
+                                  use_fused_kernel=True)
+        model = pinn_lib.TensorPinn(cfg)
+        key = jax.random.PRNGKey(seed)
+        params = model.init(key)
+        xt = model.problem.sample_collocation(jax.random.fold_in(key, 1),
+                                              batch)
+        scfg = zoo.SPSAConfig(num_samples=n, mu=1e-2)
+        blf = lambda sp, x: pinn_lib.residual_losses_stacked(model, sp, x)
+        return model, params, xt, scfg, blf, jax.random.fold_in(key, 2)
+
+    def test_zo_shard_gradient_identity_pinn():
+        """The real workload: the fused tensor-PINN stacked evaluator
+        through the distributed protocol, every layout vs the single-device
+        fused gradient.  Loss-level f32 reassociation passes through the
+        SPSA reconstruction linearly, so gradients agree to ~1e-4 relative
+        of the gradient scale (DESIGN.md §Distributed)."""
+        model, params, xt, scfg, blf, key = _pinn_setup()
+        g_ref, base_ref = jax.jit(
+            lambda p, k: zoo.spsa_gradient(
+                lambda q: pinn_lib.residual_loss(model, q, xt), p, k, scfg,
+                batched_loss_fn=lambda sp: blf(sp, xt)))(params, key)
+        ref_leaves = jax.tree.leaves(g_ref)
+        scale = max(float(jnp.max(jnp.abs(l))) for l in ref_leaves)
+        for spec, shard in [("8x1", "perturbation"), ("1x8", "batch"),
+                            ("4x2", "both")]:
+            mesh = zo_shard.make_zo_mesh(spec, shard)
+            grad_fn = zo_shard.make_distributed_spsa_gradient(mesh, blf, scfg)
+            g, base = grad_fn(params, key, xt)
+            for a, b in zip(jax.tree.leaves(g), ref_leaves):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=1e-4 * scale,
+                    rtol=1e-3, err_msg=f"layout {spec} ({shard})")
+            np.testing.assert_allclose(float(base), float(base_ref),
+                                       rtol=1e-4, err_msg=spec)
+
+    def test_zo_shard_traffic_is_scalar_only():
+        """The compiled distributed step moves O(N) f32 scalars per step —
+        never a parameter-sized tensor (the paper's scaling claim)."""
+        model, params, xt, scfg, blf, key = _pinn_setup()
+        mesh = zo_shard.make_zo_mesh("4x2", "both")
+        step = zo_shard.make_distributed_zo_step(
+            mesh, lambda sp, x, bc: blf(sp, x), scfg, donate=False)
+        state = zoo.ZOState.create(0)
+        traffic = zo_shard.measure_collective_bytes(
+            step, params, state, xt, None, 1e-3)
+        bound = zo_shard.wire_bound_bytes(scfg.num_samples, 4)
+        n_param_bytes = 4 * sum(int(np.prod(x.shape))
+                                for x in jax.tree.leaves(params))
+        assert traffic["bytes"] > 0, "no collectives found in compiled HLO"
+        assert traffic["bytes"] <= bound, traffic
+        assert traffic["bytes"] < n_param_bytes, \
+            f"parameter-sized transfer: {traffic}"
+
+    def test_zo_shard_elastic_resize_8_to_4(tmp_path):
+        """Checkpoint on an 8-device mesh, resume on 4: the loss trajectory
+        must continue exactly as the uninterrupted 8-device run (replicated
+        params + layout-invariant gradients ⇒ nothing depends on the mesh)."""
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime import ZOElasticController
+        model, params, xt, scfg, blf, _ = _pinn_setup()
+        state = zoo.ZOState.create(7)
+        make_mesh = lambda n: zo_shard.make_zo_mesh(
+            str(n), "perturbation", devices=jax.devices()[:n])
+        build = lambda mesh: zo_shard.make_distributed_zo_step(
+            mesh, lambda sp, x, bc: blf(sp, x), scfg, donate=False)
+        ckpt = CheckpointManager(tmp_path, keep=2, save_every=1)
+        ctl = ZOElasticController(ckpt=ckpt, make_mesh=make_mesh,
+                                  build_step=build)
+
+        step8 = build(make_mesh(8))
+        losses8 = []
+        for _ in range(2):
+            params, state, loss = step8(params, state, xt, None, 1e-3)
+            losses8.append(float(loss))
+        ckpt.save(2, {"params": params, "zo": state}, {"step": 2})
+        p_ref, s_ref = params, state
+        for _ in range(3):
+            p_ref, s_ref, loss = step8(p_ref, s_ref, xt, None, 1e-3)
+            losses8.append(float(loss))
+
+        mesh4, step4, tree, meta = ctl.resume(
+            4, {"params": jax.tree.map(jnp.zeros_like, params),
+                "zo": zoo.ZOState.create(0)})
+        assert meta["step"] == 2
+        assert mesh4.shape["pert"] == 4
+        p4, s4 = tree["params"], tree["zo"]
+        losses4 = []
+        for _ in range(3):
+            p4, s4, loss = step4(p4, s4, xt, None, 1e-3)
+            losses4.append(float(loss))
+        # pure perturbation re-slicing: the resumed losses and params are
+        # bit-identical to the uninterrupted run's
+        np.testing.assert_allclose(losses4, losses8[2:], rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(p4), jax.tree.leaves(p_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-7)
