@@ -65,10 +65,13 @@ def _setup(pde: str, hidden: int, batch: int, num_samples: int,
     model = pinn.TensorPinn(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
+    # tonn: perturb/update only the trainable leaves — the ±1 diag buffers
+    # stay bit-identical on every arm (DESIGN.md §Photonic)
+    mask = model.trainable_mask(params)
     xt = model.problem.sample_collocation(jax.random.fold_in(key, 1), batch)
     scfg = zoo.SPSAConfig(num_samples=num_samples, mu=0.01)
     blf = lambda sp, x, bc: pinn.residual_losses_stacked(model, sp, x, bc=bc)
-    return model, params, xt, scfg, blf, jax.random.fold_in(key, 2)
+    return model, params, xt, scfg, blf, jax.random.fold_in(key, 2), mask
 
 
 def _median_step_ms(step, params, state, xt, repeats: int) -> float:
@@ -88,7 +91,8 @@ def bench_layouts(pde: str, hidden: int, batch: int, num_samples: int,
                   repeats: int) -> list:
     """Step time + measured wire bytes per mesh layout."""
     n_dev = len(jax.devices())
-    model, params, xt, scfg, blf, _ = _setup(pde, hidden, batch, num_samples)
+    model, params, xt, scfg, blf, _, mask = _setup(pde, hidden, batch,
+                                                   num_samples)
     n_param_bytes = 4 * sum(int(np.prod(x.shape))
                             for x in jax.tree.leaves(params))
 
@@ -111,7 +115,8 @@ def bench_layouts(pde: str, hidden: int, batch: int, num_samples: int,
                 return zoo.zo_signsgd_step(
                     lf, p, s, lr=lr, cfg=scfg,
                     batched_loss_fn=lambda sp: pinn.residual_losses_stacked(
-                        model, sp, x))
+                        model, sp, x),
+                    trainable_mask=mask)
             step = jax.jit(base_step)
             traffic = {"bytes": 0, "ops": []}
             npert, nbatch = 1, 1
@@ -120,7 +125,8 @@ def bench_layouts(pde: str, hidden: int, batch: int, num_samples: int,
             npert = int(mesh.shape[zo_shard.PERT_AXIS])
             nbatch = int(mesh.shape[zo_shard.BATCH_AXIS])
             step = zo_shard.make_distributed_zo_step(mesh, blf, scfg,
-                                                     donate=False)
+                                                     donate=False,
+                                                     trainable_mask=mask)
             traffic = zo_shard.measure_collective_bytes(
                 step, params, state, xt, None, 1e-3)
         ms = _median_step_ms(step, params, state, xt, repeats)
@@ -146,24 +152,24 @@ def bench_identity(hidden: int, batch: int, num_samples: int) -> list:
     n_dev = len(jax.devices())
     rows = []
     for pde in pde_lib.available():
-        model, params, xt, scfg, blf, key = _setup(pde, hidden, batch,
-                                                   num_samples)
+        model, params, xt, scfg, blf, key, mask = _setup(pde, hidden, batch,
+                                                         num_samples)
         lf = lambda p: pinn.residual_loss(model, p, xt)
         g_ref, base_ref = jax.jit(
             lambda p, k: zoo.spsa_gradient(
                 lf, p, k, scfg,
                 batched_loss_fn=lambda sp: pinn.residual_losses_stacked(
-                    model, sp, xt)))(params, key)
+                    model, sp, xt),
+                trainable_mask=mask))(params, key)
         scale = max(float(jnp.max(jnp.abs(l)))
                     for l in jax.tree.leaves(g_ref))
         row = {"pde": pde, "grad_scale": round(scale, 4)}
         for spec, shard in [(f"{n_dev}x1", "perturbation"),
                             (f"{n_dev // 2}x2", "both")]:
             mesh = zo_shard.make_zo_mesh(spec, shard)
-            grad_fn = zo_shard.make_distributed_spsa_gradient(mesh,
-                                                              lambda sp, x:
-                                                              blf(sp, x, None),
-                                                              scfg)
+            grad_fn = zo_shard.make_distributed_spsa_gradient(
+                mesh, lambda sp, x: blf(sp, x, None), scfg,
+                trainable_mask=mask)
             g, _ = grad_fn(params, key, xt)
             err = max(float(jnp.max(jnp.abs(a - b)))
                       for a, b in zip(jax.tree.leaves(g),

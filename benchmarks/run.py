@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     short ZO training per registered problem)
   * kernels/*     — tt_contract + flash_attention vs refs (CPU wall time;
                     derived = max |err| vs oracle)
+  * photonic_mesh/* — batched MZI-mesh engine: stacked phase-domain ZO
+                    step vs the pre-PR vmap-fallback paths + mesh-apply
+                    gather-vs-scan micro (BENCH_photonic_mesh.json)
   * distributed_zo/* — sharded SPSA sweep: per-layout step time + measured
                     bytes-on-wire vs the O(N)-scalar bound (needs a
                     multi-device process; the standalone script forces 8)
@@ -70,6 +73,13 @@ def bench_zo_step(rows):
     rows += zo_step.summarize(result)
 
 
+def bench_photonic_mesh(rows):
+    """Phase-domain (tonn/onn, noise on) ZO step through the batched mesh
+    engine vs the pre-PR vmap-fallback paths, plus mesh-apply micro."""
+    from benchmarks import photonic_mesh
+    rows += photonic_mesh.summarize(photonic_mesh.run(repeats=2))
+
+
 def bench_distributed_zo(rows):
     """Distributed ZO over the forced-host mesh: per-layout step time,
     bytes-on-wire vs the O(N)-scalar bound, per-PDE gradient identity.
@@ -94,6 +104,9 @@ def main() -> None:
     ap.add_argument("--skip-zo-step", action="store_true",
                     help="skip the paper-scale fused-vs-naive ZO benchmark "
                          "(~2-4 min on a 2-core box)")
+    ap.add_argument("--skip-photonic-mesh", action="store_true",
+                    help="skip the batched-mesh-engine phase-domain ZO "
+                         "benchmark (~1-2 min on a 2-core box)")
     ap.add_argument("--skip-distributed-zo", action="store_true",
                     help="skip the sharded-SPSA layout sweep (multi-device "
                          "processes only; several shard_map compiles)")
@@ -105,6 +118,8 @@ def main() -> None:
     bench_kernels(rows)
     if not args.skip_zo_step:
         bench_zo_step(rows)
+    if not args.skip_photonic_mesh:
+        bench_photonic_mesh(rows)
     if not args.skip_distributed_zo:
         bench_distributed_zo(rows)
     if not args.skip_table1:

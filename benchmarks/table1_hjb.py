@@ -59,10 +59,14 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
 
     t0 = time.time()
     if on_chip:
-        # paper's proposed method: forward-only ZO-signSGD on-device
+        # paper's proposed method: forward-only ZO-signSGD on-device,
+        # perturbing/updating only the trainable leaves (the photonic ±1
+        # diag buffers stay bit-identical — DESIGN.md §Photonic)
         scfg = zoo.SPSAConfig(num_samples=10, mu=0.01)
         state = zoo.ZOState.create(seed + 1)
-        use_batched = not sequential and mode in ("dense", "tt", "tonn")
+        mask = model.trainable_mask(params)
+        use_batched = not sequential and mode in ("dense", "tt", "tonn",
+                                                  "onn")
 
         @jax.jit
         def step(params, state, xt, bc, lr_t):
@@ -71,7 +75,8 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
                    lambda sp: pinn.residual_losses_stacked(
                        model, sp, xt, hw_noise, bc=bc))
             return zoo.zo_signsgd_step(lf, params, state, lr=lr_t, cfg=scfg,
-                                       batched_loss_fn=blf)
+                                       batched_loss_fn=blf,
+                                       trainable_mask=mask)
 
         loss = jnp.zeros(())
         for i in range(epochs):
@@ -80,11 +85,17 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
             params, state, loss = step(params, state, xt, bc, lr_t)
         final_noise = hw_noise
     else:
-        # off-chip: BP on the ideal model (no noise during training)
+        # off-chip: BP on the ideal model (no noise during training); the
+        # photonic modes' fixed ±1 diag buffers receive nonzero BP
+        # gradients, so zero them like the ZO path does
+        mask = model.trainable_mask(params)
+
         @jax.jit
         def step(params, xt, bc, lr_t):
             lf = lambda p: pinn.residual_loss(model, p, xt, None, bc=bc)
             loss, g = jax.value_and_grad(lf)(params)
+            g = jax.tree.map(lambda gr, t: gr if t else jnp.zeros_like(gr),
+                             g, mask)
             return jax.tree.map(lambda a, b: a - lr_t * b, params, g), loss
 
         loss = jnp.zeros(())

@@ -72,14 +72,14 @@ def _time_pair(fn_a, fn_b, repeats: int = 3) -> tuple:
     return med(ta), med(tb)
 
 
-def _make_step(model, scfg, xt, noise, batched: bool):
+def _make_step(model, scfg, xt, noise, batched: bool, mask=None):
     def step(params, state):
         lf = lambda p: pinn.residual_loss(model, p, xt, noise)
         blf = (None if not batched else
                lambda sp: pinn.residual_losses_stacked(
                    model, sp, xt, noise))
         return zoo.zo_signsgd_step(lf, params, state, lr=1e-3, cfg=scfg,
-                                   batched_loss_fn=blf)
+                                   batched_loss_fn=blf, trainable_mask=mask)
     return jax.jit(step)
 
 
@@ -100,9 +100,14 @@ def bench_mode(mode: str, hidden: int, batch: int, num_samples: int,
                                                 batch)
     state = zoo.ZOState.create(seed + 1)
     params = naive_model.init(key)
+    # identical mask in both arms: same ξ for the trainable leaves, buffers
+    # (photonic ±1 diags in tonn) untouched by either sweep
+    mask = naive_model.trainable_mask(params)
 
-    naive_step = _make_step(naive_model, scfg, xt, None, batched=False)
-    fused_step = _make_step(fused_model, scfg, xt, None, batched=True)
+    naive_step = _make_step(naive_model, scfg, xt, None, batched=False,
+                            mask=mask)
+    fused_step = _make_step(fused_model, scfg, xt, None, batched=True,
+                            mask=mask)
     naive_ms, fused_ms = _time_pair(lambda: naive_step(params, state)[2],
                                     lambda: fused_step(params, state)[2],
                                     repeats)

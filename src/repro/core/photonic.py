@@ -23,17 +23,41 @@ decomposition of an existing matrix share one apply path:
   * ``decompose_orthogonal(U)``        — Givens-QR nulling → (layout, phases,
                                          diag) s.t. mesh == U (maps off-chip-
                                          trained weights onto hardware)
-  * ``mesh_apply(layout, phases, d, x)``  — y = U x, scan over levels, scatter
-                                         into a scratch lane so padded slots
-                                         never collide
+  * ``mesh_apply(layout, phases, d, x)``  — y = U x in the precomputed
+                                         GATHER form: each level is a static
+                                         wire pairing, so both rotation lanes
+                                         are gathered, rotated, and written
+                                         back scatter-free (DESIGN.md
+                                         §Photonic)
+  * ``mesh_apply_scan``                — the seed's scatter-per-level
+                                         ``lax.scan`` formulation, kept as
+                                         the sequential photonic-realism
+                                         reference (agrees with the gather
+                                         form to f32 rounding)
+  * ``mesh_apply_stacked`` /
+    ``mesh_matrix_stacked``            — the gather form with a leading
+                                         SPSA-perturbation axis on the
+                                         phases: ONE batched program
+                                         evaluates all perturbed meshes of a
+                                         ZO sweep against a shared layout
   * ``PhotonicMatrix``                 — W = U Σ Vᵀ wrapper with param
                                          init / from_dense / apply / to_dense
+                                         (+ ``apply_stacked`` /
+                                         ``to_dense_stacked`` riding the
+                                         kernel dispatcher)
   * ``NoiseModel``                     — sample + apply the three imperfections
 
+Trainable vs. buffer split: the params dict of a ``PhotonicMatrix`` holds
+the trainable phases/sigma AND the fixed ±1 ``diag_u``/``diag_v`` buffers
+(``PHOTONIC_BUFFER_KEYS``) that pin the mesh to its orthogonal
+decomposition.  ZO training must never perturb or update the buffers —
+``repro.core.zoo`` takes a trainable-mask pytree
+(``TensorPinn.trainable_mask``) that zeroes their ξ entries.
+
 Design notes (TPU adaptation, see DESIGN.md §2): the mesh is *simulated* —
-for BP baselines we differentiate through the scan; for the paper's proposed
-on-chip ZO training only forward applications are used, matching the
-"inference-only" property of the real chip.
+for BP baselines we differentiate through the level chain; for the paper's
+proposed on-chip ZO training only forward applications are used, matching
+the "inference-only" property of the real chip.
 """
 
 from __future__ import annotations
@@ -51,12 +75,23 @@ __all__ = [
     "rectangular_layout",
     "schedule_ops",
     "decompose_orthogonal",
+    "mesh_gather_plan",
+    "mesh_gather_tables",
     "mesh_apply",
+    "mesh_apply_scan",
+    "mesh_apply_stacked",
     "mesh_matrix",
+    "mesh_matrix_stacked",
     "NoiseModel",
     "PhotonicMatrix",
+    "PHOTONIC_BUFFER_KEYS",
     "mzi_count_matrix",
 ]
+
+# fixed ±1 diagonal buffers of a PhotonicMatrix params dict: part of the
+# orthogonal decomposition, NOT trainable — ZO perturbations/updates must
+# skip them (zoo.sample_perturbation's mask; TensorPinn.trainable_mask)
+PHOTONIC_BUFFER_KEYS = ("diag_u", "diag_v")
 
 
 # ---------------------------------------------------------------------------
@@ -176,8 +211,103 @@ def decompose_orthogonal(u: np.ndarray) -> tuple:
 
 
 # ---------------------------------------------------------------------------
-# Mesh application
+# Mesh application — precomputed gather/permutation form
 # ---------------------------------------------------------------------------
+#
+# Each level of the mesh is a STATIC wire pairing, so instead of scattering
+# rotated pairs back through a scratch lane (the seed's formulation, kept
+# below as ``mesh_apply_scan``), every wire's output is a gather + FMA:
+#
+#     y[w] = C[c, w] · x[w] + S[c, w] · x[perm[c, w]]
+#
+# with per-wire coefficients C = cos(φ) (1 on unpaired wires) and
+# S = ∓sin(φ) (−sin on the first lane of a pair, +sin on the second, 0 on
+# unpaired wires).  The (perm, slot, sign) plan is precomputed once per
+# layout (``mesh_gather_plan``), the whole trig table is evaluated in ONE
+# vectorized pass (``mesh_gather_tables`` — the scan paid two tiny libm
+# calls per level), and the form extends to a leading SPSA-perturbation
+# axis on the phases for free (``mesh_apply_stacked``) — the batched mesh
+# engine of the ZO hot path (DESIGN.md §Photonic).
+
+def mesh_gather_plan(layout: MeshLayout) -> tuple:
+    """Static per-level gather plan ``(perm, slot, sign)``, each
+    ``(levels, ports)``:
+
+      * ``perm[c, w]``  — the wire paired with ``w`` at level ``c``
+                          (``w`` itself when unpaired),
+      * ``slot[c, w]``  — the slot index of the MZI acting on ``w``
+                          (0 on unpaired wires; masked by ``sign``),
+      * ``sign[c, w]``  — −1 on the first lane of a pair, +1 on the
+                          second, 0 on unpaired wires.
+
+    Memoized on the (frozen) layout — plans are reused across traces.
+    """
+    plan = getattr(layout, "_gather_plan", None)
+    if plan is not None:
+        return plan
+    P = layout.ports
+    L, S = layout.idx_a.shape
+    perm = np.tile(np.arange(P, dtype=np.int32), (L, 1))
+    slot = np.zeros((L, P), dtype=np.int32)
+    sign = np.zeros((L, P), dtype=np.float32)
+    for c in range(L):
+        for k in range(S):
+            if not layout.mask[c, k]:
+                continue
+            a, b = int(layout.idx_a[c, k]), int(layout.idx_b[c, k])
+            perm[c, a], perm[c, b] = b, a
+            slot[c, a] = slot[c, b] = k
+            sign[c, a], sign[c, b] = -1.0, 1.0
+    plan = (perm, slot, sign)
+    object.__setattr__(layout, "_gather_plan", plan)
+    return plan
+
+
+def mesh_gather_tables(layout: MeshLayout, phases: jax.Array,
+                       transpose: bool = False) -> tuple:
+    """Per-wire trig tables ``(C, S)``, each ``(..., levels, ports)`` for
+    phases ``(..., levels, slots)`` — in APPLICATION order (``transpose``
+    reverses the level axis and negates the sines).  One vectorized
+    cos/sin pass over the whole gathered table."""
+    perm, slot, sign = mesh_gather_plan(layout)
+    idx = jnp.broadcast_to(jnp.asarray(slot),
+                           phases.shape[:-1] + slot.shape[-1:])
+    ph = jnp.take_along_axis(phases, idx, axis=-1)        # (..., L, P)
+    paired = sign != 0.0
+    cos = jnp.where(paired, jnp.cos(ph), 1.0)
+    sin = jnp.asarray(sign) * jnp.sin(ph)                 # sign 0 → 0
+    if transpose:
+        cos = jnp.flip(cos, axis=-2)
+        sin = -jnp.flip(sin, axis=-2)
+    return cos, sin
+
+
+def _mesh_apply_gather(layout: MeshLayout, phases: jax.Array, diag: jax.Array,
+                       x: jax.Array, transpose: bool) -> jax.Array:
+    """Shared gather-form core: ``x (..., B, P)``, ``phases (..., L, slots)``
+    and ``diag (..., P)`` with broadcast-compatible leading (stack) dims."""
+    perm, _, _ = mesh_gather_plan(layout)
+    cos, sin = mesh_gather_tables(layout, phases, transpose)
+    perm_seq = jnp.asarray(perm[::-1].copy() if transpose else perm)
+
+    if not transpose:
+        x = x * diag[..., None, :].astype(x.dtype)
+
+    # scan over levels: move the level axis of the tables to the front
+    cs = jnp.moveaxis(cos, -2, 0).astype(x.dtype)
+    sn = jnp.moveaxis(sin, -2, 0).astype(x.dtype)
+
+    def level(xc, inp):
+        pm, c, s = inp                                  # (P,), (..., P) ×2
+        xg = jnp.take(xc, pm, axis=-1)
+        return c[..., None, :] * xc + s[..., None, :] * xg, None
+
+    x, _ = jax.lax.scan(level, x, (perm_seq, cs, sn))
+
+    if transpose:
+        x = x * diag[..., None, :].astype(x.dtype)
+    return x
+
 
 def mesh_apply(layout: MeshLayout, phases: jax.Array, diag: jax.Array,
                x: jax.Array, transpose: bool = False) -> jax.Array:
@@ -186,7 +316,52 @@ def mesh_apply(layout: MeshLayout, phases: jax.Array, diag: jax.Array,
     U x computed as: x ← D x, then levels 0..C-1 each applying disjoint
     rotations R(φ)=[[c,-s],[s,c]] on wire pairs.  ``transpose=True`` runs
     levels in reverse with negated angles and applies D last.
+
+    Gather formulation — same per-level arithmetic as the seed's scatter
+    scan (``mesh_apply_scan``), matching it to float32 rounding (≤ 1 ulp
+    per level from XLA fusion choices); see DESIGN.md §Photonic.
     """
+    P = layout.ports
+    batch_shape = x.shape[:-1]
+    xf = x.reshape(-1, P)
+    y = _mesh_apply_gather(layout, phases, diag, xf, transpose)
+    return y.reshape(*batch_shape, P)
+
+
+def mesh_apply_stacked(layout: MeshLayout, phases: jax.Array, diag: jax.Array,
+                       x: jax.Array, transpose: bool = False) -> jax.Array:
+    """``mesh_apply`` with a leading stack axis on the phases — the batched
+    mesh engine of the multi-perturbation ZO sweep.
+
+    phases: ``(S, levels, slots)`` — one phase set per SPSA perturbation.
+    diag:   ``(P,)`` shared buffer or ``(S, P)`` stacked (identical rows
+            when the buffers are fixed, as ZO training guarantees).
+    x:      ``(B, P)`` shared across the stack (e.g. the identity feed of a
+            densification, or the collocation batch of layer 1) or
+            ``(S, B, P)`` per-perturbation activations.
+    Returns ``(S, B, P)``; entry ``s`` is f32-identical to
+    ``mesh_apply(layout, phases[s], diag[s], x[s])``.
+
+    This is the jnp reference; ``repro.kernels.ops.mesh_apply_stacked``
+    dispatches to the Pallas kernel (grid over stack × batch tiles, level
+    chain looped in-kernel) under ``REPRO_KERNEL_MODE``.
+    """
+    S = phases.shape[0]
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (S,) + x.shape)
+    if diag.ndim == 1:
+        diag = jnp.broadcast_to(diag[None], (S, diag.shape[0]))
+    return _mesh_apply_gather(layout, phases, diag, x, transpose)
+
+
+def mesh_apply_scan(layout: MeshLayout, phases: jax.Array, diag: jax.Array,
+                    x: jax.Array, transpose: bool = False) -> jax.Array:
+    """The seed's scatter-per-level ``lax.scan`` formulation, kept as the
+    sequential photonic-realism reference: one rotation column at a time,
+    exactly like light traversing the physical mesh.  The gather form
+    (``mesh_apply``) applies the same arithmetic and agrees to f32
+    rounding; parity is asserted in tests/test_photonic_stacked.py and
+    benchmarks/photonic_mesh.py."""
     P = layout.ports
     batch_shape = x.shape[:-1]
     xf = x.reshape(-1, P)
@@ -238,6 +413,16 @@ def mesh_matrix(layout: MeshLayout, phases: jax.Array, diag: jax.Array) -> jax.A
     return ut.T  # so column i of U
 
 
+def mesh_matrix_stacked(layout: MeshLayout, phases: jax.Array,
+                        diag: jax.Array) -> jax.Array:
+    """Densify S stacked mesh unitaries in one batched pass, sharing the
+    identity feed: ``(S, levels, slots)`` phases → ``(S, P, P)`` with
+    ``out[s] == mesh_matrix(layout, phases[s], diag[s])``."""
+    eye = jnp.eye(layout.ports, dtype=jnp.float32)
+    ut = mesh_apply_stacked(layout, phases, diag, eye)    # (S, P, P)
+    return jnp.swapaxes(ut, -1, -2)
+
+
 # ---------------------------------------------------------------------------
 # Noise / imperfection models
 # ---------------------------------------------------------------------------
@@ -266,13 +451,21 @@ class NoiseModel:
 
     def effective_phases(self, phases: jax.Array, noise: dict) -> jax.Array:
         """Φ_eff = Ω (Γ ⊙ Φ) + Φ_b.  Ω mixes adjacent slots within a level
-        (nearest physical neighbours on chip)."""
+        (nearest physical neighbours on chip).
+
+        Rank-agnostic: ``phases`` may carry arbitrary leading axes (e.g. the
+        SPSA perturbation stack of ``mesh_apply_stacked``) on top of the
+        trailing ``(levels, slots)``; the noise leaves broadcast (one
+        physical chip is shared by every perturbed model), and the
+        crosstalk pad only ever touches the trailing slot axis.
+        """
         if not self.enabled:
             return phases
         p = noise["gamma"] * phases
         if self.crosstalk > 0.0 and p.shape[-1] > 1:
-            left = jnp.pad(p[..., 1:], ((0, 0), (0, 1)))
-            right = jnp.pad(p[..., :-1], ((0, 0), (1, 0)))
+            keep = [(0, 0)] * (p.ndim - 1)
+            left = jnp.pad(p[..., 1:], keep + [(0, 1)])
+            right = jnp.pad(p[..., :-1], keep + [(1, 0)])
             p = p + self.crosstalk * (left + right)
         return p + noise["bias"]
 
@@ -343,6 +536,30 @@ class PhotonicMatrix:
             z = jnp.concatenate([z, pad], axis=-1)
         return mesh_apply(self.layout_u, pu, params["diag_u"], z)
 
+    def apply_stacked(self, params: dict, x: jax.Array,
+                      noise_model: NoiseModel | None = None,
+                      noise: dict | None = None) -> jax.Array:
+        """``apply`` over a leading SPSA-perturbation axis S on the params
+        (phases/sigma stacked; diag buffers ``(P,)`` shared or ``(S, P)``
+        with identical rows): x ``(B, in)`` shared or ``(S, B, in)`` →
+        ``(S, B, out)``.  Hardware noise is SHARED across the stack — one
+        physical chip.  Routed through the kernel dispatcher
+        (``repro.kernels.ops.mesh_apply_stacked``)."""
+        from repro.kernels import ops
+        pu, pv = params["phases_u"], params["phases_v"]
+        if noise_model is not None and noise is not None:
+            pu = noise_model.effective_phases(pu, noise["u"])
+            pv = noise_model.effective_phases(pv, noise["v"])
+        z = ops.mesh_apply_stacked(self.layout_v, pv, params["diag_v"], x,
+                                   transpose=True)
+        k = self.k
+        sig = params["sigma"].astype(z.dtype)                  # (S, k)
+        z = z[..., :k] * sig[:, None, :]
+        if self.out_dim > k:
+            pad = jnp.zeros(z.shape[:-1] + (self.out_dim - k,), dtype=z.dtype)
+            z = jnp.concatenate([z, pad], axis=-1)
+        return ops.mesh_apply_stacked(self.layout_u, pu, params["diag_u"], z)
+
     def sample_noise(self, key: jax.Array, model: NoiseModel) -> dict:
         ku, kv = jax.random.split(key)
         return {"u": model.sample(ku, self.layout_u.phase_shape()),
@@ -353,6 +570,17 @@ class PhotonicMatrix:
         eye = jnp.eye(self.in_dim, dtype=jnp.float32)
         cols = self.apply(params, eye, noise_model, noise)  # row j = W e_j
         return cols.T
+
+    def to_dense_stacked(self, params: dict,
+                         noise_model: NoiseModel | None = None,
+                         noise: dict | None = None) -> jax.Array:
+        """Densify S stacked parameter sets in ONE batched pass sharing the
+        identity feed: → ``(S, out, in)`` with entry ``s`` f32-identical to
+        ``to_dense`` of the per-index params.  This is the TONN hot-path
+        primitive: all N+1 SPSA-perturbed core meshes densify together."""
+        eye = jnp.eye(self.in_dim, dtype=jnp.float32)
+        cols = self.apply_stacked(params, eye, noise_model, noise)
+        return jnp.swapaxes(cols, -1, -2)
 
     @property
     def num_mzis(self) -> int:

@@ -56,7 +56,11 @@ class PINNConfig:
     mode: str = "tonn"          # dense | onn | tt | tonn
     tt_rank: int = 2            # paper: ranks [1,2,1,2,1]
     tt_L: int = 4               # paper: 1024 = [4,8,4,8] · [8,4,8,4]
-    fd_step: float = 1e-2   # < collocation margin; float32-noise/truncation sweet spot
+    fd_step: float | None = None  # None → the bound problem's recommended
+    #                               step (< collocation margin, f32-noise/
+    #                               truncation sweet spot); an explicit
+    #                               value always wins, even one equal to a
+    #                               problem default
     deriv: str = "fd"           # fd | fd_fast | stein
     stein_sigma: float = 5e-2
     stein_samples: int = 32
@@ -103,11 +107,12 @@ class TensorPinn:
         # the problem owns the input geometry (cfg.space_dim is legacy)
         self.space_dim = self.problem.space_dim
         self.in_dim = self.problem.in_dim
-        # effective FD step: an explicit config value wins; the dataclass
-        # default defers to the problem's recommended step (the one its
-        # residual_tol noise floor is documented at — DESIGN.md §PDE)
-        default_h = PINNConfig.__dataclass_fields__["fd_step"].default
-        self.fd_step = (cfg.fd_step if cfg.fd_step != default_h
+        # effective FD step: an explicit config value wins; the None
+        # sentinel defers to the problem's recommended step (the one its
+        # residual_tol noise floor is documented at — DESIGN.md §PDE).
+        # (The old sentinel compared against the dataclass DEFAULT, so an
+        # explicitly-passed fd_step equal to it was silently replaced.)
+        self.fd_step = (cfg.fd_step if cfg.fd_step is not None
                         else self.problem.fd_step)
         self._kron_split: int | None = None
         # stacked hot path: vectorized polynomial sine (XLA:CPU's jnp.sin is
@@ -194,6 +199,23 @@ class TensorPinn:
             raise ValueError(cfg.mode)
         return params
 
+    def trainable_mask(self, params: dict) -> dict:
+        """Boolean pytree partitioning ``params`` into trainable leaves
+        (True) and fixed buffers (False): the photonic modes carry the ±1
+        ``diag_u``/``diag_v`` buffers of every ``PhotonicMatrix`` inside
+        their params dicts, and ZO training must neither perturb nor
+        sign-update them (``zoo.zo_signsgd_step(trainable_mask=...)``) —
+        they pin each mesh to its orthogonal decomposition."""
+        buffers = photonic.PHOTONIC_BUFFER_KEYS
+
+        def is_trainable(path, leaf):
+            del leaf
+            return not any(
+                isinstance(k, jax.tree_util.DictKey) and k.key in buffers
+                for k in path)
+
+        return jax.tree_util.tree_map_with_path(is_trainable, params)
+
     def sample_noise(self, key: jax.Array) -> dict | None:
         """Fabrication noise is sampled ONCE per physical chip and then fixed
         (on-chip training adapts to it; off-chip mapping suffers from it)."""
@@ -214,17 +236,24 @@ class TensorPinn:
         return None
 
     # --------------------------------------------------------------- forward
-    def _densify_cores(self, params: dict, noise: dict | None, i: int) -> list:
-        """TONN layer i: densify each (small) core mesh into its TT-core."""
+    def _densify_cores(self, params: dict, noise: dict | None, i: int,
+                       stacked: bool = False) -> list:
+        """TONN layer i: densify each (small) core mesh into its TT-core.
+
+        ``stacked=True`` densifies a leading SPSA-perturbation axis S per
+        core in ONE batched mesh pass (``PhotonicMatrix.to_dense_stacked``)
+        — same noise selection and core reshape, one shared loop body for
+        the scalar and stacked paths."""
         cfg = self.cfg
         spec = self.specs[i]
         cores = []
         for k, pm in enumerate(self.photonic_cores[i]):
             nz = None if noise is None else noise[f"pcores{i}"][k]
-            w = pm.to_dense(params[f"pcores{i}"][k],
-                            cfg.noise if nz else None, nz)
-            r, m, n, rn = spec.core_shapes[k]
-            cores.append(w.reshape(r, m, n, rn))
+            densify = pm.to_dense_stacked if stacked else pm.to_dense
+            w = densify(params[f"pcores{i}"][k], cfg.noise if nz else None,
+                        nz)
+            shape = w.shape[:1] if stacked else ()
+            cores.append(w.reshape(shape + spec.core_shapes[k]))
         return cores
 
     def prepare_params(self, params: dict, noise: dict | None) -> tuple:
@@ -318,20 +347,35 @@ class TensorPinn:
     # --------------------------------------- stacked (multi-perturbation) ZO
     def prepare_params_stacked(self, stacked: dict, noise: dict | None) -> dict:
         """``prepare_params`` over a leading perturbation axis P on every
-        leaf: ONE vmapped densification pass for all N SPSA-perturbed models
-        (hardware noise is shared — one physical chip)."""
+        leaf: every TONN core mesh densifies all N+1 SPSA-perturbed phase
+        sets in ONE batched pass (``PhotonicMatrix.to_dense_stacked`` —
+        the batched mesh engine, sharing the identity feed and the layout
+        across the stack; hardware noise is shared too — one physical
+        chip).  The seed vmapped the scalar ``prepare_params`` instead,
+        re-tracing the scatter-per-level mesh scan per perturbation."""
         if self.cfg.mode != "tonn" or "cores0" in stacked:
             return stacked
-        return jax.vmap(lambda p: self.prepare_params(p, noise)[0])(stacked)
+        eff = {k: v for k, v in stacked.items() if not k.startswith("pcores")}
+        for i in range(len(self.specs)):
+            eff[f"cores{i}"] = self._densify_cores(stacked, noise, i,
+                                                   stacked=True)
+        return eff
 
-    def _layer_matvec_stacked(self, stacked: dict, i: int,
-                              x: jax.Array) -> jax.Array:
+    def _layer_matvec_stacked(self, stacked: dict, i: int, x: jax.Array,
+                              noise: dict | None = None) -> jax.Array:
         """Layer-i matvec for P stacked parameter sets.  x: (B', n) shared
-        across the stack or (P, B', n) per-entry; returns (P, B', m)."""
+        across the stack or (P, B', n) per-entry; returns (P, B', m).
+        ``noise`` is only consulted in ``onn`` mode (TONN bakes the
+        hardware noise into the densified cores)."""
         cfg = self.cfg
         if cfg.mode == "dense":
             sub = "bn,pmn->pbm" if x.ndim == 2 else "pbn,pmn->pbm"
             return jnp.einsum(sub, x, stacked[f"w{i}"])
+        if cfg.mode == "onn":
+            pm = self.photonic[i]
+            nz = None if noise is None else noise[f"p{i}"]
+            return pm.apply_stacked(stacked[f"p{i}"], x,
+                                    cfg.noise if nz else None, nz)
         spec = self.specs[i]
         cores = stacked[f"cores{i}"]
         if cfg.use_fused_kernel:
@@ -339,7 +383,8 @@ class TensorPinn:
             return ops.tt_linear_batched(x, cores, spec)
         return tt.tt_matvec_stacked(cores, x, spec)
 
-    def _f_head_stacked(self, stacked: dict, a: jax.Array) -> jax.Array:
+    def _f_head_stacked(self, stacked: dict, a: jax.Array,
+                        noise: dict | None = None) -> jax.Array:
         """``f = sin(W1·a + b1) @ w2ᵀ + b2`` for P stacked parameter sets:
         (P, B', hidden) activations → (P, B') f-values.
 
@@ -390,20 +435,22 @@ class TensorPinn:
             a2 = self._sin(z + b1p[:, None])
             f = jnp.einsum("pbh,poh->pbo", a2, w2p)
         else:
-            z = self._layer_matvec_stacked(stacked, 1, a) \
+            z = self._layer_matvec_stacked(stacked, 1, a, noise) \
                 + stacked["b1"][:, None]
             a2 = self._sin(z)
             f = jnp.einsum("pbh,poh->pbo", a2, stacked["w2"])
         return (f + stacked["b2"][:, None])[..., 0]
 
     def fd_u_stencil_stacked(self, stacked: dict, xt: jax.Array,
-                             h: float) -> jax.Array:
+                             h: float, noise: dict | None = None) -> jax.Array:
         """``fd_u_stencil`` for P stacked (prepared) parameter sets in one
         batched program: (P, 2·Din+1, B) u-values.  The collocation stencil
         is shared across the stack, so layer 1 reads x once per batch tile
         regardless of P (the fused-kernel analogue of TONN's one optical
         pass over all perturbed meshes); the problem ansatz broadcasts over
-        the leading P axis."""
+        the leading P axis.  In ``onn`` mode the layer matvecs run through
+        the batched mesh engine (``PhotonicMatrix.apply_stacked``) with the
+        shared hardware ``noise``."""
         cfg = self.cfg
         B, Din = xt.shape
         P = stacked["b0"].shape[0]
@@ -411,33 +458,35 @@ class TensorPinn:
         if self.in_pad > Din:
             xp = jnp.concatenate(
                 [xt, jnp.zeros((B, self.in_pad - Din), xt.dtype)], axis=-1)
-        z0 = self._layer_matvec_stacked(stacked, 0, xp) \
+        z0 = self._layer_matvec_stacked(stacked, 0, xp, noise) \
             + stacked["b0"][:, None]                                  # (P,B,H)
         eye = jnp.eye(self.in_dim, self.in_pad, dtype=jnp.float32)
-        cols = self._layer_matvec_stacked(stacked, 0, eye)            # (P,Din,H)
+        cols = self._layer_matvec_stacked(stacked, 0, eye, noise)     # (P,Din,H)
         hcols = h * cols
         z = jnp.concatenate(
             [z0[:, None],
              z0[:, None] + hcols[:, :, None],                         # +h e_i
              z0[:, None] - hcols[:, :, None]], axis=1)        # (P,2Din+1,B,H)
         a = self._sin(z).reshape(P, (2 * Din + 1) * B, cfg.hidden)
-        f = self._f_head_stacked(stacked, a).reshape(P, 2 * Din + 1, B)
+        f = self._f_head_stacked(stacked, a, noise).reshape(P, 2 * Din + 1, B)
         return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h))
 
-    def f_stacked(self, stacked: dict, xt: jax.Array) -> jax.Array:
+    def f_stacked(self, stacked: dict, xt: jax.Array,
+                  noise: dict | None = None) -> jax.Array:
         """Base network for P stacked (prepared) parameter sets over a
         SHARED input batch: (B, in_dim) → (P, B)."""
         h = xt
         if self.in_pad > self.in_dim:
             pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.in_dim,), h.dtype)
             h = jnp.concatenate([h, pad], axis=-1)
-        a = self._sin(self._layer_matvec_stacked(stacked, 0, h)
+        a = self._sin(self._layer_matvec_stacked(stacked, 0, h, noise)
                       + stacked["b0"][:, None])
-        return self._f_head_stacked(stacked, a)
+        return self._f_head_stacked(stacked, a, noise)
 
-    def u_stacked(self, stacked: dict, xt: jax.Array) -> jax.Array:
+    def u_stacked(self, stacked: dict, xt: jax.Array,
+                  noise: dict | None = None) -> jax.Array:
         """Ansatz u for P stacked parameter sets: (B, in_dim) → (P, B)."""
-        return self.problem.ansatz(self.f_stacked(stacked, xt), xt)
+        return self.problem.ansatz(self.f_stacked(stacked, xt, noise), xt)
 
 
 class HJBPinn(TensorPinn):
@@ -510,18 +559,20 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
     """The ZO hot path: residual losses of P stacked parameter sets (leading
     axis on every leaf) over ONE shared collocation batch → (P,) losses.
 
-    For dense/tt/tonn with FD derivatives this runs as a small number of
-    batched programs (densify-once, stacked TT contraction via
-    ``tt_linear_batched``, one shared stencil) instead of P independent
-    forwards.  Other mode/estimator combinations fall back to a vmap of the
-    scalar loss — correct everywhere, fused where it matters.  The fallback
-    SPLITS ``key`` per perturbation, so stochastic estimators (Stein) draw
-    independent noise for each stacked entry: stacked entry i equals
+    For dense/tt/tonn/onn with FD derivatives this runs as a small number
+    of batched programs (densify-once via the batched mesh engine, stacked
+    TT contraction via ``tt_linear_batched``, stacked mesh matvecs via
+    ``PhotonicMatrix.apply_stacked`` in onn mode, one shared stencil)
+    instead of P independent forwards.  Other mode/estimator combinations
+    (Stein derivatives) fall back to a vmap of the scalar loss — correct
+    everywhere, fused where it matters.  The fallback SPLITS ``key`` per
+    perturbation, so stochastic estimators (Stein) draw independent noise
+    for each stacked entry: stacked entry i equals
     ``residual_loss(model, params_i, xt, noise, jax.random.split(key, P)[i])``.
     """
     cfg = model.cfg
     problem = model.problem
-    if cfg.mode not in ("dense", "tt", "tonn") or \
+    if cfg.mode not in ("dense", "tt", "tonn", "onn") or \
             cfg.deriv not in ("fd", "fd_fast"):
         if key is None:
             return jax.vmap(
@@ -533,20 +584,23 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
             lambda p, k: residual_loss(model, p, xt, noise, k, bc)
         )(stacked_params, keys)
     prepared = model.prepare_params_stacked(stacked_params, noise)
+    # tonn bakes the (shared-chip) hardware noise into the densified cores;
+    # onn applies it in the stacked mesh matvecs
+    eff_noise = noise if cfg.mode == "onn" else None
     h = model.fd_step
     if cfg.deriv == "fd_fast":
-        vals = model.fd_u_stencil_stacked(prepared, xt, h)   # (P, 2D+1, B)
+        vals = model.fd_u_stencil_stacked(prepared, xt, h, eff_noise)
     else:
         B, D = xt.shape
         pts = pde_lib.fd_stencil_points(xt, h)
-        vals = model.u_stacked(prepared, pts.reshape(-1, D))
+        vals = model.u_stacked(prepared, pts.reshape(-1, D), eff_noise)
         vals = vals.reshape(vals.shape[0], 2 * D + 1, B)
     losses = jax.vmap(
         lambda v: _loss_from_u_stencil(problem, v, h, xt))(vals)
     if bc is not None:
         xb, ub = bc
         losses = losses + problem.bc_weight * _boundary_mse(
-            model.u_stacked(prepared, xb), ub)
+            model.u_stacked(prepared, xb, eff_noise), ub)
     return losses
 
 

@@ -15,6 +15,13 @@ an arbitrary callable ``loss_fn(params) -> scalar`` — only forward
 evaluations are ever taken (no jax.grad anywhere in this module), which is
 the whole point: on a photonic chip only inference exists.
 
+Trainable vs. buffer leaves: a params pytree may carry FIXED buffers (the
+photonic ±1 ``diag_u``/``diag_v`` of a mesh's orthogonal decomposition —
+``photonic.PHOTONIC_BUFFER_KEYS``).  Passing a boolean ``trainable_mask``
+pytree (e.g. ``TensorPinn.trainable_mask``) zeroes their ξ entries, so no
+SPSA dimension probes them and the sign-SGD update leaves them
+bit-identical; masking does not reshuffle the trainable leaves' draws.
+
 Fused hot path (DESIGN.md §Perf): the N perturbations ξ_i are materialized
 ONCE as a stacked pytree (``sample_perturbations``) and the N+1 losses —
 base included — are evaluated by a single batched program when the caller
@@ -82,24 +89,50 @@ class SPSAConfig:
     #                           them — see EXPERIMENTS.md §Perf cell 3)
 
 
-def sample_perturbation(key: jax.Array, params: PyTree) -> PyTree:
-    """One ξ ~ N(0, I) with the same pytree structure as ``params``."""
+def _mask_leaves(params_leaves: list, mask: PyTree | None) -> list:
+    """Per-leaf trainability flags aligned with ``jax.tree.flatten(params)``
+    order; ``mask=None`` means every leaf is trainable."""
+    if mask is None:
+        return [True] * len(params_leaves)
+    flags = jax.tree.leaves(mask)
+    if len(flags) != len(params_leaves):
+        raise ValueError(
+            f"trainable mask has {len(flags)} leaves, params have "
+            f"{len(params_leaves)} — the mask must mirror the params pytree")
+    return [bool(f) for f in flags]
+
+
+def sample_perturbation(key: jax.Array, params: PyTree,
+                        mask: PyTree | None = None) -> PyTree:
+    """One ξ ~ N(0, I) with the same pytree structure as ``params``.
+
+    ``mask`` — optional trainable-mask pytree (same structure, boolean
+    leaves): non-trainable BUFFER leaves (e.g. a PhotonicMatrix's fixed ±1
+    ``diag_u``/``diag_v``) get an exactly-zero ξ so SPSA never probes —
+    and sign-SGD never moves — them.  The trainable leaves' draws are
+    bit-identical to the unmasked call (one key per leaf either way), so
+    masking buffers does not reshuffle the perturbations of the weights.
+    """
     leaves, treedef = jax.tree.flatten(params)
     keys = jax.random.split(key, len(leaves))
-    noise = [jax.random.normal(k, l.shape, dtype=l.dtype)
-             for k, l in zip(keys, leaves)]
+    flags = _mask_leaves(leaves, mask)
+    noise = [jax.random.normal(k, l.shape, dtype=l.dtype) if t
+             else jnp.zeros_like(l)
+             for k, l, t in zip(keys, leaves, flags)]
     return jax.tree.unflatten(treedef, noise)
 
 
-def sample_perturbations(key: jax.Array, params: PyTree, n: int) -> PyTree:
+def sample_perturbations(key: jax.Array, params: PyTree, n: int,
+                         mask: PyTree | None = None) -> PyTree:
     """All N perturbations as ONE stacked pytree (leading axis n).
 
     Index i of the stack is bit-identical to
-    ``sample_perturbation(jax.random.split(key, n)[i], params)`` — the
-    sequential, vectorized, and sharded paths all see the same ξ_i.
+    ``sample_perturbation(jax.random.split(key, n)[i], params, mask)`` — the
+    sequential, vectorized, and sharded paths all see the same ξ_i.  Buffer
+    leaves (``mask`` False) carry zero perturbation across the whole stack.
     """
     keys = jax.random.split(key, n)
-    return jax.vmap(lambda k: sample_perturbation(k, params))(keys)
+    return jax.vmap(lambda k: sample_perturbation(k, params, mask))(keys)
 
 
 def _perturb(params: PyTree, xi: PyTree, mu) -> PyTree:
@@ -115,6 +148,7 @@ def spsa_losses(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
                 index_shard: tuple | None = None,
                 xis: PyTree | None = None,
                 batched_loss_fn: Callable[[PyTree], jax.Array] | None = None,
+                trainable_mask: PyTree | None = None,
                 ) -> jax.Array:
     """Evaluate the N perturbed losses L(Φ + μ ξ_i).
 
@@ -135,7 +169,7 @@ def spsa_losses(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
 
     if batched:
         if xis is None:
-            xis = sample_perturbations(key, params, n)
+            xis = sample_perturbations(key, params, n, trainable_mask)
         eval_fn = batched_loss_fn or jax.vmap(loss_fn)
         local = _stack_slice(xis, lo, hi)
         lp = eval_fn(_perturb(params, local, cfg.mu))
@@ -150,7 +184,7 @@ def spsa_losses(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
     keys = jax.random.split(key, n)
 
     def one(i, k):
-        xi = (sample_perturbation(k, params) if xis is None
+        xi = (sample_perturbation(k, params, trainable_mask) if xis is None
               else jax.tree.map(lambda z: z[i], xis))
         lp = loss_fn(_perturb(params, xi, cfg.mu))
         if cfg.antithetic:
@@ -171,14 +205,17 @@ def spsa_gradient_from_losses(params: PyTree, key: jax.Array,
                               perturbed_losses: jax.Array,
                               base_loss: jax.Array,
                               cfg: SPSAConfig,
-                              xis: PyTree | None = None) -> PyTree:
+                              xis: PyTree | None = None,
+                              trainable_mask: PyTree | None = None) -> PyTree:
     """Reconstruct Eq. (5) from the (possibly psum-merged) loss vector.
 
     With ``xis`` (the stacked perturbations already materialized by the
     fused path) the gradient is one tensordot per leaf.  Without it, every
     ξ_i is regenerated from ``key`` via ``lax.scan`` — deterministic given
     the shared seed, so all workers materialize identical gradients with no
-    tensor traffic and no N× parameter memory.
+    tensor traffic and no N× parameter memory.  ``trainable_mask`` must
+    match the one the losses were evaluated under: buffer leaves carry
+    zero ξ, so their reconstructed gradient is exactly zero.
     """
     n = cfg.num_samples
     if cfg.antithetic:
@@ -196,7 +233,7 @@ def spsa_gradient_from_losses(params: PyTree, key: jax.Array,
 
     def accum(grad, ik):
         i, k = ik
-        xi = sample_perturbation(k, params)
+        xi = sample_perturbation(k, params, trainable_mask)
         return jax.tree.map(lambda g, z: g + coefs[i] * z, grad, xi), None
 
     zero = jax.tree.map(jnp.zeros_like, params)
@@ -211,8 +248,15 @@ def spsa_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
                   axis_name: str | None = None,
                   index_shard: tuple | None = None,
                   batched_loss_fn: Callable[[PyTree], jax.Array] | None = None,
+                  trainable_mask: PyTree | None = None,
                   ) -> tuple:
     """Full Eq. (5): returns (grad, base_loss).
+
+    ``trainable_mask`` (same pytree structure, boolean leaves) partitions
+    the params into trainable leaves and fixed buffers: buffer leaves are
+    never perturbed and their gradient is exactly zero, so the downstream
+    update leaves them bit-identical (e.g. a PhotonicMatrix's ±1
+    ``diag_u``/``diag_v``).
 
     With ``axis_name`` + ``index_shard`` set, runs the distributed-ZO
     protocol: local slice of perturbed losses → psum → identical grads.
@@ -228,7 +272,8 @@ def spsa_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
     """
     n = cfg.num_samples
     batched = batched_loss_fn is not None or cfg.vectorized
-    xis = sample_perturbations(key, params, n) if batched else None
+    xis = (sample_perturbations(key, params, n, trainable_mask)
+           if batched else None)
 
     if batched and index_shard is None and base_loss is None:
         # fold the base evaluation in as a zero perturbation: ONE launch for
@@ -253,11 +298,12 @@ def spsa_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
             base_loss = loss_fn(params)
         losses = spsa_losses(loss_fn, params, key, cfg,
                              index_shard=index_shard, xis=xis,
-                             batched_loss_fn=batched_loss_fn)
+                             batched_loss_fn=batched_loss_fn,
+                             trainable_mask=trainable_mask)
     if axis_name is not None:
         losses = jax.lax.psum(losses, axis_name)
     grad = spsa_gradient_from_losses(params, key, losses, base_loss, cfg,
-                                     xis=xis)
+                                     xis=xis, trainable_mask=trainable_mask)
     return grad, base_loss
 
 
@@ -277,12 +323,21 @@ def zo_signsgd_step(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
                     axis_name: str | None = None,
                     index_shard: tuple | None = None,
                     batched_loss_fn: Callable[[PyTree], jax.Array] | None = None,
+                    trainable_mask: PyTree | None = None,
                     ) -> tuple:
-    """One Eq. (6) update: Φ ← Φ − α · sign(∇̂L).  Returns (params, state, loss)."""
+    """One Eq. (6) update: Φ ← Φ − α · sign(∇̂L).  Returns (params, state, loss).
+
+    ``trainable_mask`` excludes fixed buffers (mask False) from both the
+    SPSA probe and the update: their ξ is zero, so their gradient — and
+    ``sign(0) = 0`` update — leaves them bit-identical.  Without it every
+    leaf is treated as trainable (the seed behavior, which silently walked
+    photonic ±1 diag buffers off their orthogonal decomposition by ``lr``
+    per step)."""
     key, sub = jax.random.split(state.key)
     grad, base = spsa_gradient(loss_fn, params, sub, cfg,
                                axis_name=axis_name, index_shard=index_shard,
-                               batched_loss_fn=batched_loss_fn)
+                               batched_loss_fn=batched_loss_fn,
+                               trainable_mask=trainable_mask)
     if cfg.sign_update:
         upd = jax.tree.map(lambda g: jnp.sign(g), grad)
     else:

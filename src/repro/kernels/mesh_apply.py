@@ -1,0 +1,144 @@
+"""Batched MZI-mesh application Pallas kernel — the photonic compute
+primitive of the phase-domain ZO hot path (DESIGN.md §Photonic).
+
+A ZO sweep in ``onn``/``tonn`` mode applies N+1 SPSA-perturbed meshes that
+share ONE static layout.  The gather formulation (``repro.core.photonic``:
+per level ``y[w] = C[c,w]·x[w] + S[c,w]·x[perm[c,w]]``) turns the level
+chain into (gather, FMA) pairs with no scatter; this kernel runs that chain
+for one (perturbation, batch-tile) program with the tile resident in VMEM:
+
+  * grid ``(S, batch-tiles)`` — one stacked phase set per ``s`` step, the
+    input tile shared across ``s`` when the feed is common (identity feed
+    of a densification, collocation batch of layer 1: its BlockSpec index
+    map ignores ``s``, so the input is never duplicated S× in HBM);
+  * the per-wire trig tables ``C, S (S, levels, ports)`` are precomputed
+    OUTSIDE the kernel in one vectorized pass (tiny: the paper's core
+    meshes have ≤ ~10² entries per level);
+  * the static wire permutation enters as a stack of one-hot matrices
+    ``(levels, ports, ports)`` so the in-kernel gather is an MXU matmul —
+    exact for one-hot f32 operands, keeping the kernel f32-identical to
+    the jnp gather path;
+  * the level chain is a static Python loop (fully unrolled — levels ==
+    ports for the rectangular layout, small for the TT-core meshes this
+    kernel exists for; ``repro.kernels.ops`` falls back to the jnp path
+    above ``MESH_KERNEL_MAX_LEVELS``).
+
+VMEM budget per program: ``bt·P`` x-tile + ``2·L·P`` trig + ``L·P²``
+permutation + ``bt·P`` out — a few hundred KB at mesh sizes worth
+compiling for.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import photonic as ph_lib
+
+__all__ = ["mesh_apply_stacked_pallas", "mesh_perm_onehot"]
+
+
+def mesh_perm_onehot(layout: ph_lib.MeshLayout) -> np.ndarray:
+    """One-hot gather matrices ``M (levels, P, P)`` with
+    ``M[c, perm[c, w], w] = 1`` so ``x @ M[c] == x[:, perm[c]]`` exactly
+    (each output column selects a single input).  Memoized on the layout."""
+    cached = getattr(layout, "_perm_onehot", None)
+    if cached is not None:
+        return cached
+    perm, _, _ = ph_lib.mesh_gather_plan(layout)
+    L, P = perm.shape
+    onehot = np.zeros((L, P, P), dtype=np.float32)
+    onehot[np.arange(L)[:, None], perm, np.arange(P)[None, :]] = 1.0
+    object.__setattr__(layout, "_perm_onehot", onehot)
+    return onehot
+
+
+def _kernel(levels: int, ports: int, transpose: bool, shared_x: bool,
+            *refs):
+    x_ref, cos_ref, sin_ref, perm_ref, diag_ref, o_ref = refs
+    x = x_ref[...]
+    if not shared_x:                         # (1, bt, P) block → (bt, P)
+        x = x.reshape(x.shape[-2], x.shape[-1])
+    x = x.astype(jnp.float32)
+    d = diag_ref[...].reshape(ports)
+    cos = cos_ref[...].reshape(levels, ports)
+    sin = sin_ref[...].reshape(levels, ports)
+    if not transpose:
+        x = x * d[None, :]
+    for c in range(levels):                  # static unroll over the chain
+        xg = jax.lax.dot_general(x, perm_ref[c], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        x = cos[c][None, :] * x + sin[c][None, :] * xg
+    if transpose:
+        x = x * d[None, :]
+    o_ref[...] = x.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def default_batch_tile(ports: int, levels: int,
+                       vmem_budget_bytes: int = 4 * 2**20) -> int:
+    """Largest batch tile whose resident set (x + out tiles; the trig and
+    permutation tables are batch-independent) fits the VMEM budget."""
+    fixed = (2 * levels * ports + levels * ports * ports) * 4
+    per_row = 2 * ports * 4
+    bt = max(8, (vmem_budget_bytes - fixed) // max(per_row, 1))
+    if bt >= 128:
+        bt = (bt // 128) * 128
+    return min(int(bt), 2048)
+
+
+def mesh_apply_stacked_pallas(layout: ph_lib.MeshLayout, phases: jax.Array,
+                              diag: jax.Array, x: jax.Array,
+                              transpose: bool = False,
+                              batch_tile: int | None = None,
+                              interpret: bool = False) -> jax.Array:
+    """Kernel-backed ``photonic.mesh_apply_stacked``: phases
+    ``(S, levels, slots)``, diag ``(P,)`` or ``(S, P)``, x ``(B, P)``
+    shared or ``(S, B, P)`` → ``(S, B, P)``."""
+    S = phases.shape[0]
+    Pw = layout.ports
+    levels = layout.levels
+    shared_x = x.ndim == 2
+    if not shared_x and x.shape[0] != S:
+        raise ValueError(f"x leading axis {x.shape[0]} != phase stack S={S}")
+    B = x.shape[-2]
+
+    cos, sin = ph_lib.mesh_gather_tables(layout, phases, transpose)
+    onehot = mesh_perm_onehot(layout)
+    if transpose:
+        onehot = np.ascontiguousarray(onehot[::-1])
+        # tables are already level-reversed/negated by mesh_gather_tables
+    diag2 = jnp.broadcast_to(diag, (S, Pw)) if diag.ndim == 1 else diag
+
+    bt = batch_tile or default_batch_tile(Pw, levels)
+    bt = min(bt, B)
+    Bp = ((B + bt - 1) // bt) * bt
+    if Bp != B:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, Bp - B), (0, 0)]
+        x = jnp.pad(x, pad)
+
+    grid = (S, Bp // bt)
+    if shared_x:
+        in_specs = [pl.BlockSpec((bt, Pw), lambda s, i: (i, 0))]
+    else:
+        in_specs = [pl.BlockSpec((1, bt, Pw), lambda s, i: (s, i, 0))]
+    in_specs += [
+        pl.BlockSpec((1, levels, Pw), lambda s, i: (s, 0, 0)),   # cos
+        pl.BlockSpec((1, levels, Pw), lambda s, i: (s, 0, 0)),   # sin
+        pl.BlockSpec((levels, Pw, Pw), lambda s, i: (0, 0, 0)),  # perm
+        pl.BlockSpec((1, Pw), lambda s, i: (s, 0)),              # diag
+    ]
+    out_spec = pl.BlockSpec((1, bt, Pw), lambda s, i: (s, i, 0))
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, levels, Pw, transpose, shared_x),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((S, Bp, Pw), x.dtype),
+        interpret=interpret,
+    )(x, cos, sin, jnp.asarray(onehot), diag2)
+    return y[:, :B]

@@ -18,12 +18,30 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import photonic as _ph
 from repro.core import tt as tt_lib
 from repro.kernels import flash_attention as _fa
+from repro.kernels import mesh_apply as _mesh
 from repro.kernels import ref as _ref
 from repro.kernels import tt_contract as _ttc
 
-__all__ = ["kernel_mode", "tt_linear", "tt_linear_batched", "attention"]
+__all__ = ["kernel_mode", "tt_linear", "tt_linear_batched",
+           "mesh_apply_stacked", "attention"]
+
+# above this many mesh levels the fully-unrolled kernel chain stops being
+# worth compiling (onn-sized meshes: levels == ports, e.g. hidden 1024) —
+# the jnp gather path takes over regardless of mode
+MESH_KERNEL_MAX_LEVELS = 128
+# the one-hot permutation stack (levels × P × P f32) must leave VMEM room
+# for the batch tile; past this footprint the grid would degrade to tiny
+# tiles re-streaming the table from HBM, so the jnp path wins instead
+MESH_KERNEL_MAX_ONEHOT_BYTES = 2 * 2**20
+
+
+def _mesh_kernel_applicable(layout) -> bool:
+    return (layout.levels <= MESH_KERNEL_MAX_LEVELS
+            and 4 * layout.levels * layout.ports * layout.ports
+            <= MESH_KERNEL_MAX_ONEHOT_BYTES)
 
 
 def kernel_mode() -> str:
@@ -54,6 +72,28 @@ def tt_linear_batched(x: jax.Array, cores: Sequence[jax.Array],
         return _ref.tt_contract_batched_ref(x, cores, spec)
     return _ttc.tt_contract_batched(x, tuple(cores), spec,
                                     interpret=(mode == "interpret"))
+
+
+def mesh_apply_stacked(layout, phases: jax.Array, diag: jax.Array,
+                       x: jax.Array, transpose: bool = False,
+                       mode: str | None = None) -> jax.Array:
+    """S stacked MZI-mesh applications in one program — the batched
+    photonic engine of the phase-domain ZO path.
+
+    phases ``(S, levels, slots)`` (one set per SPSA perturbation), diag
+    ``(P,)`` shared buffer or ``(S, P)``, x ``(B, P)`` shared or
+    ``(S, B, P)``; returns ``(S, B, P)``.  Dispatches between the Pallas
+    kernel (grid over stack × batch tiles, level chain looped in-kernel)
+    and the jnp gather reference (``photonic.mesh_apply_stacked``); deep or
+    wide meshes (levels > MESH_KERNEL_MAX_LEVELS, or a one-hot permutation
+    table past MESH_KERNEL_MAX_ONEHOT_BYTES) always take the jnp path.
+    """
+    mode = mode or kernel_mode()
+    if mode == "ref" or not _mesh_kernel_applicable(layout):
+        return _ph.mesh_apply_stacked(layout, phases, diag, x, transpose)
+    return _mesh.mesh_apply_stacked_pallas(layout, phases, diag, x,
+                                           transpose=transpose,
+                                           interpret=(mode == "interpret"))
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -87,8 +87,14 @@ def train_pinn(args):
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     hw_noise = model.sample_noise(jax.random.fold_in(key, 99))
-    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
-    print(f"[pinn] trainable params: {n_params}")
+    # partition trainable phases/weights from fixed buffers (photonic ±1
+    # diags): ZO must neither perturb nor sign-update the buffers
+    mask = model.trainable_mask(params)
+    n_train = sum(int(np.prod(x.shape)) for x, t
+                  in zip(jax.tree.leaves(params), jax.tree.leaves(mask)) if t)
+    n_buf = sum(int(np.prod(x.shape)) for x, t
+                in zip(jax.tree.leaves(params), jax.tree.leaves(mask)) if not t)
+    print(f"[pinn] trainable params: {n_train} (+ {n_buf} fixed buffers)")
     val = problem.sample_collocation(jax.random.fold_in(key, 1234), 1000) \
         if problem.has_exact_solution else None
 
@@ -135,7 +141,7 @@ def train_pinn(args):
             mesh,
             lambda sp, xt, bc: pinn.residual_losses_stacked(
                 model, sp, xt, hw_noise, bc=bc),
-            scfg)
+            scfg, trainable_mask=mask)
     elif opt_name == "zo-signsgd":
         scfg = zoo.SPSAConfig(num_samples=args.zo_samples, mu=0.01)
         aux = zoo.ZOState.create(args.seed + 1)
@@ -148,7 +154,8 @@ def train_pinn(args):
                    lambda sp: pinn.residual_losses_stacked(
                        model, sp, xt, hw_noise, bc=bc))
             return zoo.zo_signsgd_step(lf, params, aux, lr=lr_t, cfg=scfg,
-                                       batched_loss_fn=blf)
+                                       batched_loss_fn=blf,
+                                       trainable_mask=mask)
     else:
         # off-chip BP baseline on the ideal (or noisy) model
         opt = get_optimizer(opt_name, lr=args.lr)
@@ -160,6 +167,11 @@ def train_pinn(args):
             # lr_t unused: the BP optimizers carry their own schedule
             lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise, bc=bc)
             loss, grads = jax.value_and_grad(lf)(params)
+            # the fixed buffers get nonzero BP gradients (they scale wires
+            # elementwise) — zero them so the baseline can't walk the ±1
+            # diags off the orthogonal decomposition either
+            grads = jax.tree.map(
+                lambda g, t: g if t else jnp.zeros_like(g), grads, mask)
             new_params, new_aux = opt.update(grads, aux, params)
             return new_params, new_aux, loss
 

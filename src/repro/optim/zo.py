@@ -31,7 +31,8 @@ PyTree = Any
 def distributed_zo_signsgd_step(mesh, batched_loss_fn: Callable,
                                 num_samples: int = 10, mu: float = 1e-2,
                                 sign_update: bool = True,
-                                donate: bool = True) -> Callable:
+                                donate: bool = True,
+                                trainable_mask: PyTree | None = None) -> Callable:
     """Build the distributed ZO-signSGD step for ``mesh``.
 
     ``mesh`` is a ``("pert", "batch")`` mesh (``zo_shard.make_zo_mesh``);
@@ -41,12 +42,15 @@ def distributed_zo_signsgd_step(mesh, batched_loss_fn: Callable,
     cross-device traffic is O(N) scalar losses; parameters never move
     (DESIGN.md §Distributed).  Rebuild with a different mesh to resize
     elastically (``repro.runtime.elastic.ZOElasticController``).
+    ``trainable_mask`` excludes fixed buffers (e.g. photonic ±1 diags,
+    ``TensorPinn.trainable_mask``) from the SPSA probe and the update.
     """
     from repro.parallel import zo_shard
     cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu,
                          sign_update=sign_update)
     return zo_shard.make_distributed_zo_step(mesh, batched_loss_fn, cfg,
-                                             donate=donate)
+                                             donate=donate,
+                                             trainable_mask=trainable_mask)
 
 
 def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],
@@ -57,13 +61,15 @@ def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],
                             num_workers: int = 1,
                             vectorized: bool = False,
                             batched_loss_fn: Callable[[PyTree], jax.Array]
-                            | None = None) -> tuple:
+                            | None = None,
+                            trainable_mask: PyTree | None = None) -> tuple:
     """One BP-free update. Returns (new_params, loss).
 
     ``vectorized`` batches the N perturbed loss evaluations (generic vmap);
     ``batched_loss_fn`` supplies a fused stacked-params evaluator (e.g. the
     PINN's ``residual_losses_stacked`` → one stacked TT-kernel launch
     for all perturbations).  Both compose with sharding.
+    ``trainable_mask`` excludes fixed buffers from the probe and update.
     """
     cfg = zoo.SPSAConfig(num_samples=num_samples, mu=mu,
                          vectorized=vectorized)
@@ -73,7 +79,8 @@ def zo_signsgd_trainer_step(loss_fn: Callable[[PyTree], jax.Array],
         shard = (worker_index * per, min(num_samples, (worker_index + 1) * per))
     grad, base = zoo.spsa_gradient(loss_fn, params, key, cfg,
                                    axis_name=axis_name, index_shard=shard,
-                                   batched_loss_fn=batched_loss_fn)
+                                   batched_loss_fn=batched_loss_fn,
+                                   trainable_mask=trainable_mask)
     new_params = jax.tree.map(
         lambda p, g: p - lr * jnp.sign(g).astype(p.dtype), params, grad)
     return new_params, base

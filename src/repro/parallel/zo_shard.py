@@ -167,12 +167,14 @@ def make_zo_mesh(spec: str | None = None, shard: str | None = None,
 
 
 def _augmented_perturbations(key: jax.Array, params: PyTree, n: int,
-                             n_pad: int) -> tuple:
+                             n_pad: int,
+                             trainable_mask: PyTree | None = None) -> tuple:
     """(xis, aug): the N sampled perturbations plus the padded evaluation
     stack [0, ξ_1..ξ_N, 0...] of length ``n_pad`` (entry 0 is the base loss;
     zero-padding re-evaluates the base — wasted only on non-divisible
-    layouts, and masked out of the merged vector)."""
-    xis = zoo.sample_perturbations(key, params, n)
+    layouts, and masked out of the merged vector).  Buffer leaves
+    (``trainable_mask`` False) carry zero ξ across the stack."""
+    xis = zoo.sample_perturbations(key, params, n, trainable_mask)
     aug = jax.tree.map(
         lambda z: jnp.concatenate(
             [jnp.zeros_like(z[:1]), z,
@@ -184,6 +186,7 @@ def _augmented_perturbations(key: jax.Array, params: PyTree, n: int,
 def spsa_gradient_sharded(batched_loss_fn: Callable[[PyTree, jax.Array], jax.Array],
                           params: PyTree, key: jax.Array, xt: jax.Array,
                           cfg: zoo.SPSAConfig, shard_cfg: ZOShardConfig,
+                          trainable_mask: PyTree | None = None,
                           ) -> tuple:
     """Distributed Eq. (5) — runs INSIDE ``shard_map``. Returns (grad, base).
 
@@ -207,7 +210,7 @@ def spsa_gradient_sharded(batched_loss_fn: Callable[[PyTree, jax.Array], jax.Arr
     npert, nbatch = shard_cfg.num_pert_shards, shard_cfg.num_batch_shards
     per = pert_shard_size(n + 1, npert)
     n_pad = per * npert
-    xis, aug = _augmented_perturbations(key, params, n, n_pad)
+    xis, aug = _augmented_perturbations(key, params, n, n_pad, trainable_mask)
 
     if npert > 1:
         w = jax.lax.axis_index(shard_cfg.pert_axis)
@@ -239,12 +242,13 @@ def spsa_gradient_sharded(batched_loss_fn: Callable[[PyTree, jax.Array], jax.Arr
 def zo_signsgd_step_sharded(batched_loss_fn, params: PyTree,
                             state: zoo.ZOState, xt: jax.Array, lr,
                             cfg: zoo.SPSAConfig, shard_cfg: ZOShardConfig,
+                            trainable_mask: PyTree | None = None,
                             ) -> tuple:
     """One distributed Eq. (6) update (inside shard_map).
     Returns (params, state, base_loss); all outputs replicated."""
     key, sub = jax.random.split(state.key)
     grad, base = spsa_gradient_sharded(batched_loss_fn, params, sub, xt,
-                                       cfg, shard_cfg)
+                                       cfg, shard_cfg, trainable_mask)
     upd = jax.tree.map(jnp.sign, grad) if cfg.sign_update else grad
     new_params = jax.tree.map(lambda p, u: p - lr * u.astype(p.dtype),
                               params, upd)
@@ -253,6 +257,7 @@ def zo_signsgd_step_sharded(batched_loss_fn, params: PyTree,
 
 def make_distributed_zo_step(mesh: Mesh, batched_loss_fn,
                              cfg: zoo.SPSAConfig, *, donate: bool = True,
+                             trainable_mask: PyTree | None = None,
                              ) -> Callable:
     """Build the jitted distributed step for ``mesh``.
 
@@ -266,13 +271,16 @@ def make_distributed_zo_step(mesh: Mesh, batched_loss_fn,
     everywhere — see DESIGN.md §Distributed).  Rebuilding for a different
     mesh is the whole elastic-resize story: parameters are replicated, so
     nothing needs re-sharding (``runtime.elastic.ZOElasticController``).
+    ``trainable_mask`` (replicated static structure) excludes fixed buffers
+    — e.g. the photonic ±1 diags (``TensorPinn.trainable_mask``) — from
+    the regenerated ξ stacks on every device, keeping them bit-identical.
     """
     shard_cfg = ZOShardConfig.from_mesh(mesh)
 
     def worker(params, state, xt, bc, lr):
         blf = lambda sp, x: batched_loss_fn(sp, x, bc)
         return zo_signsgd_step_sharded(blf, params, state, xt, lr,
-                                       cfg, shard_cfg)
+                                       cfg, shard_cfg, trainable_mask)
 
     sharded = shard_map(
         worker, mesh=mesh,
@@ -301,7 +309,9 @@ def wire_bound_bytes(num_samples: int, n_pert: int, slack: int = 4) -> int:
 
 
 def make_distributed_spsa_gradient(mesh: Mesh, batched_loss_fn,
-                                   cfg: zoo.SPSAConfig) -> Callable:
+                                   cfg: zoo.SPSAConfig,
+                                   trainable_mask: PyTree | None = None,
+                                   ) -> Callable:
     """Gradient-only counterpart of ``make_distributed_zo_step``: a jitted
     ``(params, key, xt) -> (grad, base_loss)`` over the mesh.  This is what
     the gradient-identity tests/benchmarks compare against the single-device
@@ -309,7 +319,7 @@ def make_distributed_spsa_gradient(mesh: Mesh, batched_loss_fn,
     shard_cfg = ZOShardConfig.from_mesh(mesh)
     sharded = shard_map(
         lambda p, k, x: spsa_gradient_sharded(batched_loss_fn, p, k, x,
-                                              cfg, shard_cfg),
+                                              cfg, shard_cfg, trainable_mask),
         mesh=mesh, in_specs=(P(), P(), P(shard_cfg.batch_axis)),
         out_specs=(P(), P()), check_rep=False)
     return jax.jit(sharded)

@@ -270,7 +270,7 @@ def test_fd_fast_matches_generic_fd():
     model = pinn.HJBPinn(cfg)
     params = model.init(jax.random.PRNGKey(0))
     xt = pinn.sample_collocation(jax.random.PRNGKey(1), 32)
-    h = cfg.fd_step
+    h = model.fd_step
     B, D = xt.shape
     eye = jnp.eye(D) * h
     stacked = jnp.concatenate(
@@ -353,11 +353,13 @@ def test_spsa_gradient_batched_matches_sequential():
                                    rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("mode", ["dense", "tt", "tonn"])
+@pytest.mark.parametrize("mode", ["dense", "tt", "tonn", "onn"])
 @pytest.mark.parametrize("deriv", ["fd", "fd_fast"])
 def test_stacked_pinn_losses_match_sequential(mode, deriv):
     """hjb_residual_losses_stacked (the fused multi-perturbation evaluator)
-    == a python loop of hjb_residual_loss over the stack."""
+    == a python loop of hjb_residual_loss over the stack.  ``onn`` rides
+    the batched mesh engine (PhotonicMatrix.apply_stacked) since this PR —
+    previously a vmap fallback."""
     nm = photonic.NoiseModel(enabled=(mode == "tonn"))
     cfg = pinn.PINNConfig(hidden=32, mode=mode, tt_rank=2, tt_L=2,
                           deriv=deriv, noise=nm)
@@ -395,8 +397,8 @@ def test_fused_kernel_tonn_forward_matches_unfused(monkeypatch):
         *[model.init(k) for k in jax.random.split(jax.random.PRNGKey(2), 3)])
     prepared = model.prepare_params_stacked(stacked, None)
     np.testing.assert_allclose(
-        np.asarray(model_f.fd_u_stencil_stacked(prepared, xt, cfg.fd_step)),
-        np.asarray(model.fd_u_stencil_stacked(prepared, xt, cfg.fd_step)),
+        np.asarray(model_f.fd_u_stencil_stacked(prepared, xt, model.fd_step)),
+        np.asarray(model.fd_u_stencil_stacked(prepared, xt, model.fd_step)),
         rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(
         np.asarray(pinn.hjb_residual_losses_stacked(model_f, stacked, xt)),
@@ -417,8 +419,8 @@ def test_kron_head_paper_spec_matches_generic():
     params = model.init(jax.random.PRNGKey(0))
     stacked = jax.tree.map(lambda p: jnp.stack([p, 1.01 * p]), params)
     xt = pinn.sample_collocation(jax.random.PRNGKey(1), 4)
-    u_f = model_f.fd_u_stencil_stacked(stacked, xt, cfg.fd_step)
-    u_g = model.fd_u_stencil_stacked(stacked, xt, cfg.fd_step)
+    u_f = model_f.fd_u_stencil_stacked(stacked, xt, model.fd_step)
+    u_g = model.fd_u_stencil_stacked(stacked, xt, model.fd_step)
     np.testing.assert_allclose(np.asarray(u_f), np.asarray(u_g),
                                rtol=1e-5, atol=1e-5)
     l_f = pinn.hjb_residual_losses_stacked(model_f, stacked, xt)

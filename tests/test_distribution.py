@@ -14,6 +14,7 @@ NEEDS = 8
 
 if os.environ.get("XLA_FLAGS", "").find("host_platform_device_count") < 0:
     # Re-run this test module in a subprocess with 8 host devices.
+    @pytest.mark.slow
     def test_distribution_suite_subprocess():
         env = dict(os.environ)
         env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={NEEDS} "

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import tt
+from repro.core import photonic, tt
 from repro.kernels import ops, ref
 
 
@@ -92,6 +92,64 @@ def test_tt_linear_batched_dispatch_ref_equals_interpret():
     y_int = ops.tt_linear_batched(x, stacks, spec, mode="interpret")
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_int),
                                atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------- mesh_apply_stacked (ZO)
+
+MESH_CASES = [
+    # (ports, S, batch, shared_x, transpose)
+    (8, 4, 16, True, False),     # a TT-core-sized mesh, shared identity feed
+    (8, 4, 16, False, True),     # per-perturbation activations, Uᵀ
+    (16, 11, 33, True, False),   # N=10 SPSA stack + base, unaligned batch
+    (5, 3, 7, True, True),       # odd ports (unpaired wires every level)
+]
+
+
+@pytest.mark.parametrize("ports,S,batch,shared_x,transpose", MESH_CASES)
+def test_mesh_apply_stacked_kernel_matches_ref(ports, S, batch, shared_x,
+                                               transpose):
+    """Pallas kernel (interpret) vs the jnp gather reference: the one-hot
+    permutation matmul keeps the chain f32-identical."""
+    lay = photonic.rectangular_layout(ports)
+    key = jax.random.PRNGKey(0)
+    phs = jax.random.normal(key, (S,) + lay.phase_shape())
+    d = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (ports,)))
+    d = jnp.where(d == 0, 1.0, d)
+    shape = (batch, ports) if shared_x else (S, batch, ports)
+    x = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    y_ref = photonic.mesh_apply_stacked(lay, phs, d, x, transpose=transpose)
+    y_k = ops.mesh_apply_stacked(lay, phs, d, x, transpose=transpose,
+                                 mode="interpret")
+    assert y_k.shape == (S, batch, ports)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_ref))
+
+
+def test_mesh_apply_stacked_kernel_qr_layout_and_stacked_diag():
+    """Kernel path on a Givens-QR (ragged-level) layout with a stacked diag."""
+    u = np.linalg.qr(np.random.RandomState(1).randn(8, 8))[0]
+    lay, ph, d = photonic.decompose_orthogonal(u)
+    S = 3
+    phs = jnp.stack([ph, 1.1 * ph, 0.9 * ph])
+    ds = jnp.stack([d] * S)
+    x = jax.random.normal(jax.random.PRNGKey(2), (9, 8))
+    y_ref = photonic.mesh_apply_stacked(lay, phs, ds, x)
+    y_k = ops.mesh_apply_stacked(lay, phs, ds, x, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_ref))
+
+
+def test_mesh_apply_stacked_deep_mesh_falls_back_to_ref():
+    """Levels above MESH_KERNEL_MAX_LEVELS (onn-sized meshes) must silently
+    take the jnp path in every mode — no unrollable kernel is built."""
+    ports = ops.MESH_KERNEL_MAX_LEVELS + 4
+    lay = photonic.rectangular_layout(ports)
+    assert lay.levels > ops.MESH_KERNEL_MAX_LEVELS
+    phs = 0.1 * jax.random.normal(jax.random.PRNGKey(0),
+                                  (2,) + lay.phase_shape())
+    d = jnp.ones((ports,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, ports))
+    y_i = ops.mesh_apply_stacked(lay, phs, d, x, mode="interpret")
+    y_r = ops.mesh_apply_stacked(lay, phs, d, x, mode="ref")
+    np.testing.assert_array_equal(np.asarray(y_i), np.asarray(y_r))
 
 
 # ------------------------------------------------------------ flash attention

@@ -153,6 +153,33 @@ def test_stacked_losses_match_sequential_per_problem(name, deriv):
                                rtol=2e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("mode", ["tonn", "onn"])
+def test_photonic_noise_stacked_matches_sequential(mode):
+    """The paper's Table-1 on-chip rows: photonic parametrization with the
+    fabrication-noise model ON.  The batched mesh engine (stacked
+    densification for tonn, stacked mesh matvecs for onn) must reproduce a
+    sequential loop of scalar losses on the same (shared-chip) noise —
+    boundary term included via helmholtz for tonn."""
+    from repro.core import photonic
+    name = "helmholtz-2d" if mode == "tonn" else "heat-10d"
+    nm = photonic.NoiseModel(enabled=True)
+    cfg = pinn.PINNConfig(hidden=16, mode=mode, tt_rank=2, tt_L=2,
+                          deriv="fd_fast", pde=name, noise=nm)
+    model = pinn.TensorPinn(cfg)
+    prob = model.problem
+    plist = [model.init(k) for k in jax.random.split(jax.random.PRNGKey(0), 3)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+    noise = model.sample_noise(jax.random.PRNGKey(5))
+    xt = prob.sample_collocation(jax.random.PRNGKey(1), 8)
+    bc = (prob.boundary_batch(jax.random.PRNGKey(2), 8)
+          if prob.has_boundary_loss else None)
+    seq = jnp.stack([pinn.residual_loss(model, p, xt, noise, bc=bc)
+                     for p in plist])
+    bat = pinn.residual_losses_stacked(model, stacked, xt, noise, bc=bc)
+    np.testing.assert_allclose(np.asarray(bat), np.asarray(seq),
+                               rtol=2e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("name", ["heat-10d", "helmholtz-2d"])
 def test_fused_kernel_stacked_matches_unfused_per_problem(name):
     """use_fused_kernel (stacked TT contraction + Kronecker head +

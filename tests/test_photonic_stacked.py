@@ -1,0 +1,317 @@
+"""Batched photonic mesh engine + ZO buffer partition tests.
+
+Covers the stacked mesh paths (gather formulation, ``mesh_apply_stacked``,
+``to_dense_stacked``), the rank-agnostic noise model, the trainable-vs-
+buffer split of ZO training (fixed ±1 ``diag_u``/``diag_v`` must survive
+sign-SGD bit-for-bit), and the ``fd_step`` sentinel fix.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import photonic, pinn, zoo
+
+
+def _rand_pm1(key, n):
+    d = jnp.sign(jax.random.normal(key, (n,)))
+    return jnp.where(d == 0, 1.0, d)
+
+
+# ------------------------------------------------ gather vs scan formulation
+
+@pytest.mark.parametrize("transpose", [False, True])
+def test_mesh_apply_gather_matches_scan(transpose):
+    """The precomputed-gather mesh_apply applies the same per-level
+    arithmetic as the seed's scatter scan (photonic-realism reference):
+    agreement to f32 rounding (XLA fusion may differ by ~1 ulp/level)."""
+    lay = photonic.rectangular_layout(9)
+    key = jax.random.PRNGKey(0)
+    ph = jax.random.normal(key, lay.phase_shape())
+    d = _rand_pm1(jax.random.fold_in(key, 1), 9)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (7, 9))
+    y_scan = photonic.mesh_apply_scan(lay, ph, d, x, transpose=transpose)
+    y_gath = photonic.mesh_apply(lay, ph, d, x, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(y_gath), np.asarray(y_scan),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mesh_apply_gather_matches_scan_on_qr_layout():
+    """The gather plan must also cover the Givens-QR (Reck-ordered) layouts
+    produced by decompose_orthogonal, whose levels are ragged."""
+    u = np.linalg.qr(np.random.RandomState(3).randn(7, 7))[0]
+    lay, ph, d = photonic.decompose_orthogonal(u)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 7))
+    np.testing.assert_allclose(
+        np.asarray(photonic.mesh_apply(lay, ph, d, x)),
+        np.asarray(photonic.mesh_apply_scan(lay, ph, d, x)),
+        rtol=1e-6, atol=1e-6)
+    # and still reproduce the decomposed matrix
+    np.testing.assert_allclose(np.asarray(photonic.mesh_matrix(lay, ph, d)),
+                               u, atol=1e-4)
+
+
+# ----------------------------------------------------------- stacked parity
+
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("shared_x", [True, False])
+def test_mesh_apply_stacked_matches_per_perturbation(transpose, shared_x):
+    """mesh_apply_stacked == a loop of mesh_apply over the stack,
+    f32-IDENTICAL (same contraction order, shared layout)."""
+    lay = photonic.rectangular_layout(8)
+    key = jax.random.PRNGKey(2)
+    S = 5
+    phs = jax.random.normal(key, (S,) + lay.phase_shape())
+    d = _rand_pm1(jax.random.fold_in(key, 1), 8)
+    x = jax.random.normal(jax.random.fold_in(key, 2),
+                          (7, 8) if shared_x else (S, 7, 8))
+    ys = photonic.mesh_apply_stacked(lay, phs, d, x, transpose=transpose)
+    yl = jnp.stack([
+        photonic.mesh_apply(lay, phs[s], d, x if shared_x else x[s],
+                            transpose=transpose)
+        for s in range(S)])
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yl))
+
+
+def test_mesh_apply_stacked_accepts_stacked_diag():
+    lay = photonic.rectangular_layout(6)
+    key = jax.random.PRNGKey(3)
+    S = 3
+    phs = jax.random.normal(key, (S,) + lay.phase_shape())
+    ds = jnp.stack([_rand_pm1(jax.random.fold_in(key, s), 6)
+                    for s in range(S)])
+    x = jax.random.normal(jax.random.fold_in(key, 9), (4, 6))
+    ys = photonic.mesh_apply_stacked(lay, phs, ds, x)
+    yl = jnp.stack([photonic.mesh_apply(lay, phs[s], ds[s], x)
+                    for s in range(S)])
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yl))
+
+
+def test_mesh_matrix_stacked_matches_looped():
+    lay = photonic.rectangular_layout(10)
+    phs = jax.random.normal(jax.random.PRNGKey(4), (4,) + lay.phase_shape())
+    d = jnp.ones((10,))
+    ms = photonic.mesh_matrix_stacked(lay, phs, d)
+    ml = jnp.stack([photonic.mesh_matrix(lay, phs[s], d) for s in range(4)])
+    np.testing.assert_array_equal(np.asarray(ms), np.asarray(ml))
+    # each stacked entry is still orthogonal
+    eye = jnp.eye(10)
+    for s in range(4):
+        np.testing.assert_allclose(np.asarray(ms[s] @ ms[s].T), np.asarray(eye),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("noisy", [False, True])
+def test_photonic_matrix_stacked_matches_looped(noisy):
+    """apply_stacked / to_dense_stacked vs the per-index scalar paths, with
+    and without the (shared-chip) noise model."""
+    pm = photonic.PhotonicMatrix(6, 9)
+    key = jax.random.PRNGKey(5)
+    S = 4
+    plist = [pm.init(jax.random.fold_in(key, s)) for s in range(S)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+    nm = photonic.NoiseModel(enabled=True) if noisy else None
+    noise = pm.sample_noise(jax.random.fold_in(key, 99), nm) if noisy else None
+    x = jax.random.normal(jax.random.fold_in(key, 7), (5, 9))
+    ys = pm.apply_stacked(stacked, x, nm, noise)
+    yl = jnp.stack([pm.apply(p, x, nm, noise) for p in plist])
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yl))
+    td = pm.to_dense_stacked(stacked, nm, noise)
+    tl = jnp.stack([pm.to_dense(p, nm, noise) for p in plist])
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(tl))
+
+
+# ------------------------------------------------- rank-agnostic noise model
+
+def test_effective_phases_rank_agnostic():
+    """Regression: the crosstalk mix hard-coded a rank-2 pad spec and
+    crashed on phases with a leading stack axis.  Contract: an explicit
+    stacked axis and a vmap over the stack both reproduce the per-index
+    rank-2 result exactly."""
+    nm = photonic.NoiseModel(gamma_std=0.01, crosstalk=0.02,
+                             phase_bias_scale=1.0, enabled=True)
+    shape = (5, 3)
+    noise = nm.sample(jax.random.PRNGKey(0), shape)
+    phs = jax.random.normal(jax.random.PRNGKey(1), (4,) + shape)
+    per_index = jnp.stack([nm.effective_phases(phs[s], noise)
+                           for s in range(4)])
+    stacked = nm.effective_phases(phs, noise)           # explicit stack axis
+    np.testing.assert_array_equal(np.asarray(stacked), np.asarray(per_index))
+    vmapped = jax.vmap(lambda p: nm.effective_phases(p, noise))(phs)
+    np.testing.assert_array_equal(np.asarray(vmapped), np.asarray(per_index))
+
+
+def test_effective_phases_single_slot_level():
+    """Degenerate slots axis (one MZI per level): no crosstalk mix, but the
+    gamma/bias terms must still apply at any rank."""
+    nm = photonic.NoiseModel(crosstalk=0.5, enabled=True)
+    noise = nm.sample(jax.random.PRNGKey(0), (4, 1))
+    phs = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 1))
+    out = nm.effective_phases(phs, noise)
+    assert out.shape == (2, 4, 1)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(noise["gamma"] * phs + noise["bias"]))
+
+
+# ---------------------------------------------- ZO trainable/buffer split
+
+def test_sample_perturbation_mask_zeroes_buffers_only():
+    """Buffer leaves carry exactly-zero ξ; trainable leaves draw the SAME
+    bits as the unmasked call (masking must not reshuffle the weights'
+    perturbations)."""
+    cfg = pinn.PINNConfig(hidden=16, mode="tonn", tt_L=2, tt_rank=2)
+    model = pinn.TensorPinn(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mask = model.trainable_mask(params)
+    key = jax.random.PRNGKey(7)
+    xi_masked = zoo.sample_perturbation(key, params, mask)
+    xi_full = zoo.sample_perturbation(key, params)
+    for m, zm, zf in zip(jax.tree.leaves(mask), jax.tree.leaves(xi_masked),
+                         jax.tree.leaves(xi_full)):
+        if m:
+            np.testing.assert_array_equal(np.asarray(zm), np.asarray(zf))
+        else:
+            np.testing.assert_array_equal(np.asarray(zm), 0.0)
+    # the stacked sampler carries the zero rows across the whole ξ stack
+    xis = zoo.sample_perturbations(key, params, 4, mask)
+    for m, z in zip(jax.tree.leaves(mask), jax.tree.leaves(xis)):
+        if not m:
+            np.testing.assert_array_equal(np.asarray(z), 0.0)
+
+
+def test_trainable_mask_marks_exactly_the_diag_buffers():
+    for mode, per_mesh in (("onn", 2), ("tonn", 2)):
+        cfg = pinn.PINNConfig(hidden=16, mode=mode, tt_L=2, tt_rank=2)
+        model = pinn.TensorPinn(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        flat = jax.tree_util.tree_flatten_with_path(
+            model.trainable_mask(params))[0]
+        buffers = [path for path, t in flat if not t]
+        assert buffers, mode
+        for path in buffers:
+            keys = {k.key for k in path
+                    if isinstance(k, jax.tree_util.DictKey)}
+            assert keys & set(photonic.PHOTONIC_BUFFER_KEYS), path
+
+
+@pytest.mark.parametrize("mode", ["onn", "tonn"])
+def test_zo_training_leaves_diag_buffers_bit_identical(mode):
+    """THE regression for this PR's headline bug: 50 ZO-signSGD steps in a
+    photonic mode must leave every diag entry exactly at its initial ±1
+    value (the seed perturbed and sign-updated the buffers, drifting each
+    mesh off its orthogonal decomposition by lr per step)."""
+    nm = photonic.NoiseModel(enabled=True)
+    cfg = pinn.PINNConfig(hidden=16, mode=mode, tt_L=2, tt_rank=2,
+                          deriv="fd_fast", noise=nm)
+    model = pinn.TensorPinn(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    # exercise both signs: flip a few diag entries (still a valid mesh)
+    params = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: (_rand_pm1(jax.random.PRNGKey(len(path)),
+                                      leaf.shape[0])
+                            if any(isinstance(k, jax.tree_util.DictKey)
+                                   and k.key in photonic.PHOTONIC_BUFFER_KEYS
+                                   for k in path) else leaf),
+        params)
+    mask = model.trainable_mask(params)
+    buffers0 = [np.asarray(l) for (p, l)
+                in jax.tree_util.tree_flatten_with_path(params)[0]
+                if any(isinstance(k, jax.tree_util.DictKey)
+                       and k.key in photonic.PHOTONIC_BUFFER_KEYS
+                       for k in p)]
+    noise = model.sample_noise(jax.random.fold_in(key, 99))
+    xt = model.problem.sample_collocation(jax.random.fold_in(key, 1), 4)
+    scfg = zoo.SPSAConfig(num_samples=2, mu=0.01)
+    state = zoo.ZOState.create(3)
+
+    @jax.jit
+    def step(params, state):
+        lf = lambda p: pinn.residual_loss(model, p, xt, noise)
+        blf = lambda sp: pinn.residual_losses_stacked(model, sp, xt, noise)
+        return zoo.zo_signsgd_step(lf, params, state, lr=1e-2, cfg=scfg,
+                                   batched_loss_fn=blf, trainable_mask=mask)
+
+    for _ in range(50):
+        params, state, loss = step(params, state)
+    assert bool(jnp.isfinite(loss))
+    buffers1 = [np.asarray(l) for (p, l)
+                in jax.tree_util.tree_flatten_with_path(params)[0]
+                if any(isinstance(k, jax.tree_util.DictKey)
+                       and k.key in photonic.PHOTONIC_BUFFER_KEYS
+                       for k in p)]
+    assert buffers1
+    for b0, b1 in zip(buffers0, buffers1):
+        np.testing.assert_array_equal(b1, b0)        # bit-identical
+        assert set(np.unique(b1)) <= {-1.0, 1.0}     # still exactly ±1
+    # and the trainable phases DID move
+    moved = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for (pa, a), (pb, b)
+             in zip(jax.tree_util.tree_flatten_with_path(model.init(key))[0],
+                    jax.tree_util.tree_flatten_with_path(params)[0])
+             if not any(isinstance(k, jax.tree_util.DictKey)
+                        and k.key in photonic.PHOTONIC_BUFFER_KEYS
+                        for k in pa)]
+    assert any(moved)
+
+
+def test_sequential_zo_path_respects_mask_too():
+    """The non-batched (photonic-realism) sweep and the regenerate-from-seed
+    gradient reconstruction honor the same mask."""
+    params = {"w": jnp.zeros(6), "diag_u": jnp.ones(4)}
+    mask = {"w": True, "diag_u": False}
+    lf = lambda p: jnp.sum((p["w"] - 1.0) ** 2) + jnp.sum(p["diag_u"] ** 2)
+    cfg = zoo.SPSAConfig(num_samples=4, mu=1e-2)
+    grad, _ = zoo.spsa_gradient(lf, params, jax.random.PRNGKey(0), cfg,
+                                trainable_mask=mask)
+    np.testing.assert_array_equal(np.asarray(grad["diag_u"]), 0.0)
+    # batched path reconstructs the identical gradient for trainable leaves
+    cfg_v = dataclasses.replace(cfg, vectorized=True)
+    grad_v, _ = zoo.spsa_gradient(lf, params, jax.random.PRNGKey(0), cfg_v,
+                                  trainable_mask=mask)
+    np.testing.assert_allclose(np.asarray(grad_v["w"]), np.asarray(grad["w"]),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(grad_v["diag_u"]), 0.0)
+
+
+def test_distributed_zo_step_respects_mask():
+    """The sharded step (1×1 mesh on one device — same code path as any
+    layout) keeps buffers bit-identical."""
+    from repro.parallel import zo_shard
+    params = {"w": jnp.ones(8), "diag_u": -jnp.ones(3)}
+    mask = {"w": True, "diag_u": False}
+    blf = lambda sp, xt, bc: jax.vmap(
+        lambda p: jnp.sum((p["w"] - 2.0) ** 2) + jnp.mean(xt) * 0.0)(sp)
+    mesh = zo_shard.make_zo_mesh("1x1")
+    step = zo_shard.make_distributed_zo_step(
+        mesh, blf, zoo.SPSAConfig(num_samples=4, mu=1e-2),
+        trainable_mask=mask)
+    state = zoo.ZOState.create(0)
+    xt = jnp.ones((8, 2))
+    p1, state, _ = step(params, state, xt, None, 1e-2)
+    np.testing.assert_array_equal(np.asarray(p1["diag_u"]),
+                                  -np.ones(3, np.float32))
+    assert not np.array_equal(np.asarray(p1["w"]), np.ones(8, np.float32))
+
+
+# ----------------------------------------------------- fd_step sentinel fix
+
+def test_explicit_fd_step_equal_to_old_default_is_honored():
+    """Regression: fd_step resolved by comparing against the dataclass
+    default (1e-2), so explicitly passing that exact value was silently
+    replaced by the problem's recommended step."""
+    from repro import pde
+
+    class SmallStep(pde.HJBProblem):
+        fd_step = 5e-3
+
+    explicit = pinn.PINNConfig(hidden=16, mode="dense", fd_step=1e-2)
+    model = pinn.TensorPinn(explicit, problem=SmallStep())
+    assert model.fd_step == 1e-2          # the explicitly-passed value wins
+    default = pinn.PINNConfig(hidden=16, mode="dense")
+    assert default.fd_step is None        # sentinel, resolved per problem
+    assert pinn.TensorPinn(default, problem=SmallStep()).fd_step == 5e-3

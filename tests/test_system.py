@@ -16,6 +16,7 @@ from repro.launch.serve import Request, ServingEngine
 from repro.models import api
 
 
+@pytest.mark.slow
 def test_zo_tt_pinn_training_converges():
     """The paper's core claim at CI scale: BP-free ZO training of the
     TT-compressed PINN reaches low validation MSE (paper: 5.53e-3 at
@@ -65,6 +66,7 @@ def test_trainer_cli_with_resume(tmp_path):
                 "--resume", "--log-every", "100"])
 
 
+@pytest.mark.slow
 def test_trainer_cli_zo_mode(tmp_path):
     from repro.launch.train import main as train_main
     train_main(["--arch", "mamba2-780m", "--reduced", "--steps", "3",
