@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * distributed_zo/* — sharded SPSA sweep: per-layout step time + measured
                     bytes-on-wire vs the O(N)-scalar bound (needs a
                     multi-device process; the standalone script forces 8)
+  * serve_pde/*   — slot-batched PDE inference runtime: p50/p99 request
+                    latency + points/sec at 1k/10k concurrent points,
+                    engine vs naive per-request-jit (BENCH_serve_pde.json)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
                     fraction; run launch/dryrun.py first to populate)
 """
@@ -96,6 +99,13 @@ def bench_distributed_zo(rows):
         distributed_zo.run(hidden=64, batch=32, repeats=2))
 
 
+def bench_serve_pde(rows):
+    """Slot-batched serving runtime vs naive per-request jit at 1k/10k
+    concurrent query points (mixed heat-tt / hjb-tonn traffic)."""
+    from benchmarks import serve_pde
+    rows += serve_pde.summarize(serve_pde.run())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table1-epochs", type=int, default=300)
@@ -110,6 +120,9 @@ def main() -> None:
     ap.add_argument("--skip-distributed-zo", action="store_true",
                     help="skip the sharded-SPSA layout sweep (multi-device "
                          "processes only; several shard_map compiles)")
+    ap.add_argument("--skip-serve-pde", action="store_true",
+                    help="skip the slot-batched serving runtime benchmark "
+                         "(~30s; the naive arm compiles per request)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
@@ -122,6 +135,8 @@ def main() -> None:
         bench_photonic_mesh(rows)
     if not args.skip_distributed_zo:
         bench_distributed_zo(rows)
+    if not args.skip_serve_pde:
+        bench_serve_pde(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)

@@ -1,0 +1,245 @@
+"""Serving latency/throughput benchmark: the slot-batched PDE inference
+runtime vs a naive per-request-jit server (DESIGN.md §Serving).
+
+Workload: mixed traffic against two registered solvers (``heat-10d`` tt +
+``hjb-10d`` tonn — exercising both the plain TT contraction and the
+densified-mesh path) at two concurrency scales: ~1k and ~10k total query
+points spread over variable-size requests (8–256 points each, a render-
+tile / sensor-probe mix).  Three arms per scale:
+
+  * ``engine``       — ``PdeServingEngine``: slot-pooled continuous
+    batching, ONE AOT-compiled program per (solver, dtype, slot-shape),
+    cold cache.  Reports p50/p99 request latency (submit → completion,
+    queue wait included) and points/sec.
+  * ``engine_hot``    — the same queries resubmitted: the stencil cache
+    answers at submit time; no program runs at all.
+  * ``naive``         — per-request ``jax.jit`` (a fresh jit cache per
+    request, the no-runtime baseline: every client call pays tracing +
+    XLA compile).  Measured on a subset (``--naive-requests``) because a
+    full 10k-point sweep of compiles is pointless; throughput is
+    per-request latency over that subset.
+
+Gates (--ci): engine throughput ≥ 5× naive at both scales, zero engine
+recompiles after warmup (compile count == #programs), and served outputs
+bit-identical to a direct ``TensorPinn`` forward.  Emits
+``BENCH_serve_pde.json`` (archived by CI).
+
+    PYTHONPATH=src python benchmarks/serve_pde.py --ci
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pinn
+from repro.serving import PdeServingEngine, PointRequest, SolverRegistry
+
+SOLVERS = {
+    # (pde, mode): both contraction paths — plain TT cores and the
+    # densified-at-load TONN mesh cores
+    "heat": ("heat-10d", "tt"),
+    "hjb": ("hjb-10d", "tonn"),
+}
+
+
+def build_registry(hidden: int = 32, tt_L: int = 3) -> SolverRegistry:
+    reg = SolverRegistry()
+    for i, (name, (pde, mode)) in enumerate(SOLVERS.items()):
+        cfg = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=2,
+                              tt_L=tt_L, pde=pde)
+        reg.register_fresh(name, cfg, seed=i)
+    return reg
+
+
+def make_requests(reg: SolverRegistry, total_points: int,
+                  seed: int = 0) -> list:
+    """Variable-size mixed-solver request stream totalling
+    ``total_points`` query points (sizes 8–256, round-robin solvers)."""
+    rng = np.random.RandomState(seed)
+    names = sorted(SOLVERS)
+    reqs, left, i = [], total_points, 0
+    while left > 0:
+        n = int(min(left, rng.randint(8, 257)))
+        name = names[i % len(names)]
+        pts = np.asarray(reg.get(name).problem.sample_collocation(
+            jax.random.PRNGKey(seed * 100_000 + i), n), np.float32)
+        reqs.append((name, pts))
+        left -= n
+        i += 1
+    return reqs
+
+
+def _latency_stats(lat_s: list) -> dict:
+    lat_ms = np.asarray(lat_s) * 1e3
+    return {"p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            "mean_ms": round(float(lat_ms.mean()), 3)}
+
+
+def run_engine_arm(reg: SolverRegistry, reqs: list, slots: int,
+                   slot_points: int, check_exact: int = 4) -> dict:
+    """Serve the whole stream through one engine; then resubmit it against
+    the hot cache.  ``check_exact`` requests are verified bit-identical to
+    a direct forward."""
+    eng = PdeServingEngine(reg, slots=slots, slot_points=slot_points)
+    # warmup: compile + first-dispatch every (solver, f32, slot-shape)
+    # program up front so one-time cost is reported separately from
+    # steady-state latency (a deployment warms up before taking traffic)
+    t0 = time.perf_counter()
+    eng.warmup()
+    warmup_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    handles = [eng.submit(PointRequest(name, pts)) for name, pts in reqs]
+    eng.run()
+    wall_s = time.perf_counter() - t0
+    assert all(r.done for r in handles)
+    compiles_after_serve = eng.stats["compiles"]
+
+    exact = True
+    for r in handles[:check_exact]:
+        s = reg.get(r.solver)
+        direct = np.asarray(jax.jit(
+            lambda p, _s=s: _s.model.u(_s.params, p, _s.noise))(
+                jnp.asarray(r.points, jnp.float32)))
+        exact = exact and np.array_equal(r.out.astype(np.float32), direct)
+
+    # hot-cache arm: identical queries answered at submit time
+    t0 = time.perf_counter()
+    hot = [eng.submit(PointRequest(name, pts)) for name, pts in reqs]
+    eng.run()
+    hot_wall_s = time.perf_counter() - t0
+    assert all(r.done for r in hot)
+    points = sum(len(p) for _, p in reqs)
+    return {
+        "engine": {
+            **_latency_stats([r.latency_s for r in handles]),
+            "wall_s": round(wall_s, 3),
+            "points_per_sec": round(points / wall_s, 1),
+            "compile_warmup_s": round(warmup_s, 3),
+            "compiles": compiles_after_serve,
+            "program_runs": eng.stats["program_runs"],
+            "recompiles_during_serve": compiles_after_serve
+            - len(eng._programs),
+            "bit_identical": bool(exact),
+        },
+        "engine_hot": {
+            **_latency_stats([r.latency_s for r in hot]),
+            "wall_s": round(hot_wall_s, 3),
+            "points_per_sec": round(points / hot_wall_s, 1),
+            "cache": eng.cache.stats(),
+        },
+    }
+
+
+def run_naive_arm(reg: SolverRegistry, reqs: list,
+                  naive_requests: int) -> dict:
+    """Per-request jit: every request pays tracing + XLA compile, the cost
+    a runtime-less deployment pays on every distinct client (a fresh
+    ``jax.jit`` per request models the no-cache worst case; even WITH a
+    shared jit cache, every distinct request SIZE recompiles)."""
+    sub = reqs[:naive_requests]
+    lat = []
+    t0 = time.perf_counter()
+    for name, pts in sub:
+        s = reg.get(name)
+        t1 = time.perf_counter()
+        fn = jax.jit(lambda p, _s=s: _s.model.u(_s.params, p, _s.noise))
+        out = np.asarray(fn(jnp.asarray(pts)))
+        out.sum()  # materialized
+        lat.append(time.perf_counter() - t1)
+    wall_s = time.perf_counter() - t0
+    points = sum(len(p) for _, p in sub)
+    return {**_latency_stats(lat),
+            "requests": len(sub),
+            "points": points,
+            "wall_s": round(wall_s, 3),
+            "points_per_sec": round(points / wall_s, 1)}
+
+
+def run(scales=(1000, 10_000), hidden: int = 32, slots: int = 8,
+        slot_points: int = 256, naive_requests: int = 12,
+        seed: int = 0) -> dict:
+    reg = build_registry(hidden=hidden)
+    rows = []
+    for total in scales:
+        reqs = make_requests(reg, total, seed=seed)
+        row = {"total_points": total, "requests": len(reqs)}
+        row.update(run_engine_arm(reg, reqs, slots, slot_points))
+        row["naive"] = run_naive_arm(reg, reqs, naive_requests)
+        row["throughput_vs_naive"] = round(
+            row["engine"]["points_per_sec"]
+            / max(row["naive"]["points_per_sec"], 1e-9), 1)
+        rows.append(row)
+    return {
+        "config": {"hidden": hidden, "slots": slots,
+                   "slot_points": slot_points, "scales": list(scales),
+                   "solvers": {k: list(v) for k, v in SOLVERS.items()},
+                   "naive_requests": naive_requests,
+                   "backend": jax.default_backend(),
+                   "devices": len(jax.devices())},
+        "rows": rows,
+    }
+
+
+def summarize(result: dict) -> list:
+    """Rows for benchmarks/run.py's CSV."""
+    out = []
+    for r in result["rows"]:
+        out.append({
+            "name": f"serve_pde/engine({r['total_points']}pts)",
+            "us_per_call": round(r["engine"]["p50_ms"] * 1e3, 1),
+            "derived": (f"p99={r['engine']['p99_ms']}ms, "
+                        f"{r['engine']['points_per_sec']:.0f} pts/s, "
+                        f"{r['throughput_vs_naive']}x naive, "
+                        f"compiles={r['engine']['compiles']}"),
+        })
+        out.append({
+            "name": f"serve_pde/cache_hot({r['total_points']}pts)",
+            "us_per_call": round(r["engine_hot"]["p50_ms"] * 1e3, 1),
+            "derived": f"{r['engine_hot']['points_per_sec']:.0f} pts/s",
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="assert the throughput/bit-identity/no-recompile "
+                         "gates after the run")
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--slot-points", type=int, default=256)
+    ap.add_argument("--scales", default="1000,10000")
+    ap.add_argument("--naive-requests", type=int, default=12)
+    ap.add_argument("--out", default="BENCH_serve_pde.json")
+    args = ap.parse_args()
+
+    result = run(scales=tuple(int(s) for s in args.scales.split(",")),
+                 hidden=args.hidden, slots=args.slots,
+                 slot_points=args.slot_points,
+                 naive_requests=args.naive_requests)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    if args.ci:
+        for r in result["rows"]:
+            assert r["engine"]["bit_identical"], \
+                f"served != direct forward at {r['total_points']} pts"
+            assert r["engine"]["recompiles_during_serve"] == 0, r["engine"]
+            assert r["throughput_vs_naive"] >= 5.0, (
+                f"engine {r['engine']['points_per_sec']} pts/s is "
+                f"< 5x naive {r['naive']['points_per_sec']} pts/s "
+                f"at {r['total_points']} pts")
+        print(f"[serve_pde] {len(result['rows'])} scales OK "
+              "(>=5x naive, 0 recompiles, bit-identical)")
+
+
+if __name__ == "__main__":
+    main()

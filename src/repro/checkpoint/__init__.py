@@ -1,3 +1,4 @@
 from repro.checkpoint.manager import (  # noqa: F401
-    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step)
+    CheckpointManager, save_checkpoint, restore_checkpoint, latest_step,
+    read_checkpoint_meta)
 from repro.checkpoint.remesh import remesh_checkpoint  # noqa: F401

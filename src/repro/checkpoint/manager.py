@@ -100,6 +100,27 @@ def restore_checkpoint(directory: str | os.PathLike, tree_like: PyTree,
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
 
+def read_checkpoint_meta(directory: str | os.PathLike,
+                         step: int | None = None) -> dict:
+    """``meta.json`` of a complete checkpoint WITHOUT loading its arrays.
+
+    The serving registry resolves a trained solver's identity (PDE problem
+    name, ``PINNConfig`` arch, training seed) from this before paying for
+    the parameter restore — training writes those under the ``"pinn"`` key
+    (``launch/train.py``); checkpoints predating the key still load, the
+    caller just has to supply the config explicitly.
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    path = directory / f"step_{step:012d}"
+    if not (path / "COMMITTED").exists():
+        raise FileNotFoundError(f"incomplete checkpoint {path}")
+    return json.loads((path / "meta.json").read_text())
+
+
 def latest_step(directory: str | os.PathLike) -> int | None:
     directory = Path(directory)
     if not directory.exists():

@@ -43,6 +43,7 @@ from repro.core import fastmath, photonic, stein, tt
 
 __all__ = ["PINNConfig", "TensorPinn", "sample_collocation",
            "residual_loss", "residual_losses_stacked", "validation_mse",
+           "config_to_meta", "config_from_meta",
            # deprecated HJB-specific aliases
            "HJBPinn", "hjb_exact_solution", "hjb_residual_loss",
            "hjb_residual_losses_stacked"]
@@ -77,6 +78,27 @@ class PINNConfig:
         """Deprecated: (x, t) input width of the HJB compat path — the model
         takes its true input width from the bound ``PDEProblem``."""
         return self.space_dim + 1
+
+
+def config_to_meta(cfg: PINNConfig) -> dict:
+    """JSON-safe dict of a ``PINNConfig`` (NoiseModel nested) — the
+    checkpoint-metadata form consumed by ``repro.serving.SolverRegistry``,
+    so a trained-solver checkpoint is loadable by name with no config
+    side-channel (DESIGN.md §Serving)."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_meta(meta: dict) -> PINNConfig:
+    """Inverse of ``config_to_meta``.  Unknown keys are ignored so configs
+    written by a NEWER repro version still load (forward compatibility);
+    missing keys take the dataclass defaults (older checkpoints)."""
+    fields = {f.name for f in dataclasses.fields(PINNConfig)}
+    kw = {k: v for k, v in meta.items() if k in fields}
+    if isinstance(kw.get("noise"), dict):
+        nz_fields = {f.name for f in dataclasses.fields(photonic.NoiseModel)}
+        kw["noise"] = photonic.NoiseModel(
+            **{k: v for k, v in kw["noise"].items() if k in nz_fields})
+    return PINNConfig(**kw)
 
 
 def hjb_exact_solution(xt: jax.Array) -> jax.Array:

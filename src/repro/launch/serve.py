@@ -12,6 +12,7 @@ Used by examples/serve_lm.py and tests/test_serving.py on reduced configs.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable
 
@@ -45,7 +46,9 @@ class ServingEngine:
         self.budget = np.zeros(slots, np.int64)
         self._decode = jax.jit(
             lambda p, c, t: api.decode_fn(p, cfg, c, t))
-        self.queue: list = []
+        # deque: admission pops from the head every free slot — O(1) vs the
+        # O(n) list.pop(0) under a deep backlog
+        self.queue: collections.deque = collections.deque()
         # NOTE: shared-pos cache — slots admitted together share the timeline;
         # per-slot pos would need a vector ``pos`` (future work).
 
@@ -55,7 +58,7 @@ class ServingEngine:
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.active[s] = req
                 self.budget[s] = req.max_new_tokens
 

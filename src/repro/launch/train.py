@@ -99,6 +99,12 @@ def train_pinn(args):
         if problem.has_exact_solution else None
 
     mgr = None
+    # self-describing checkpoints: the serving registry loads a trained
+    # solver by name from this alone (arch + problem + the noise seed that
+    # regenerates the fixed per-chip fabrication noise) — no config
+    # side-channel (DESIGN.md §Serving)
+    ckpt_meta = {"pinn": pinn.config_to_meta(cfg), "pde": problem.name,
+                 "seed": args.seed}
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, keep=3,
                                 save_every=args.ckpt_every,
@@ -206,11 +212,12 @@ def train_pinn(args):
                         f"{float(pinn.validation_mse(model, params, val, hw_noise)):.4e}")
             print(msg)
         if mgr and mgr.should_save(step):
-            mgr.save(step, {"params": params, aux_name: aux}, {"step": step})
+            mgr.save(step, {"params": params, aux_name: aux},
+                     {"step": step, **ckpt_meta})
 
     if mgr:
         mgr.save(args.steps, {"params": params, aux_name: aux},
-                 {"step": args.steps})
+                 {"step": args.steps, **ckpt_meta})
         mgr.wait()
     if val is not None:
         print(f"[pinn] final val MSE "

@@ -1,0 +1,33 @@
+"""PDE solver-as-a-service: the batched inference runtime for trained
+``TensorPinn`` solvers (DESIGN.md §Serving).
+
+Training happens once; this package is the heavy-traffic path — thousands
+of clients querying ``u(x, t)`` against frozen, rank-compressed solvers:
+
+  * ``SolverRegistry`` / ``LoadedSolver`` — named checkpoints made
+    inference-ready once (TONN densification + chip-noise reconstruction
+    hoisted out of the request path),
+  * ``PdeServingEngine`` / ``PointRequest`` — slot-pooled continuous
+    batching with ONE AOT-compiled, shape-stable program per
+    (solver, dtype, slot-shape),
+  * ``StencilCache`` — LRU result cache on quantized query coordinates
+    for repeated stencil/grid traffic.
+
+Quickstart::
+
+    from repro.serving import (PdeServingEngine, PointRequest,
+                               SolverRegistry)
+    reg = SolverRegistry()
+    reg.load_checkpoint("heat", "ckpts/heat-10d")   # self-describing ckpt
+    eng = PdeServingEngine(reg, slots=8, slot_points=256)
+    req = eng.submit(PointRequest("heat", points))  # (n, in_dim) queries
+    eng.run()
+    req.out                                         # (n,) u-values
+"""
+
+from repro.serving.cache import StencilCache  # noqa: F401
+from repro.serving.engine import PdeServingEngine, PointRequest  # noqa: F401
+from repro.serving.registry import LoadedSolver, SolverRegistry  # noqa: F401
+
+__all__ = ["StencilCache", "PdeServingEngine", "PointRequest",
+           "LoadedSolver", "SolverRegistry"]

@@ -1,0 +1,115 @@
+"""Result cache for repeated stencil/grid queries (DESIGN.md §Serving).
+
+Real PDE-solver traffic is heavily repetitive: visualization frontends ask
+for the same render grid every frame, FD/stencil post-processing asks for
+``x ± h·e_i`` neighbourhoods around the same centers, and monitoring probes
+poll fixed sensor locations.  ``u(x, t)`` of a FROZEN trained solver is a
+pure function, so those repeats never need to touch the compiled program.
+
+``StencilCache`` is a plain LRU keyed on **quantized** query coordinates:
+a key is the solver name, the compute dtype, and the point's coordinates
+snapped to a ``quantum``-spaced grid (``round(x / quantum)`` per axis, as
+int64).  Two queries landing in the same cell are served the same value —
+the first-computed one — so ``quantum`` is the cache's resolution contract:
+at the default ``1e-9`` it acts as an exact repeat-query cache for f32
+coordinates (f32 has ~7 significant digits; distinct f32 coordinates in the
+unit-box domains never collide at 1e-9), while a coarser quantum turns it
+into a deliberate down-resolution cache for dense render grids.
+
+Values stored are the engine's served outputs, which are bit-identical to a
+direct ``TensorPinn`` forward (DESIGN.md §Serving: pad-invariance), so a
+hit is indistinguishable from a recompute.  Hit/miss/eviction counters are
+exposed for the benchmark and the serving stats endpoint.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+__all__ = ["StencilCache"]
+
+
+class StencilCache:
+    """LRU ``(solver, dtype, quantized point) → u`` cache.
+
+    ``capacity`` counts cached POINTS (not requests).  Not thread-safe by
+    itself — the engine serializes access from its step loop.
+    """
+
+    def __init__(self, capacity: int = 65536, quantum: float = 1e-9):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        if quantum <= 0:
+            raise ValueError(f"quantum must be positive, got {quantum}")
+        self.capacity = int(capacity)
+        self.quantum = float(quantum)
+        self._store: OrderedDict[bytes, float] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------ keys
+    def keys_for(self, solver: str, dtype, points: np.ndarray) -> list:
+        """Quantized cache keys for a (n, in_dim) point batch.
+
+        Quantization runs in f64 so the key grid is stable regardless of
+        the query's storage dtype; the dtype tag keeps e.g. bf16-served
+        values from answering f32 queries.
+        """
+        pts = np.asarray(points, np.float64)
+        cells = np.round(pts / self.quantum).astype(np.int64)
+        prefix = f"{solver}|{np.dtype(dtype).name}|".encode()
+        return [prefix + row.tobytes() for row in cells]
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(self, keys: list) -> tuple:
+        """Split a key batch into hits and misses.
+
+        Returns ``(hit_idx, hit_vals, miss_idx)``: positions (into ``keys``)
+        and cached values of the hits, and positions of the misses.  Hits
+        are refreshed to most-recently-used.
+        """
+        hit_idx, hit_vals, miss_idx = [], [], []
+        store = self._store
+        for i, k in enumerate(keys):
+            v = store.get(k)
+            if v is None:
+                miss_idx.append(i)
+            else:
+                store.move_to_end(k)
+                hit_idx.append(i)
+                hit_vals.append(v)
+        self.hits += len(hit_idx)
+        self.misses += len(miss_idx)
+        return (np.asarray(hit_idx, np.int64),
+                np.asarray(hit_vals, np.float64),
+                np.asarray(miss_idx, np.int64))
+
+    def insert(self, keys: list, values: np.ndarray) -> None:
+        """Insert computed values (evicting least-recently-used past
+        capacity).  Re-inserting an existing key refreshes it; the value is
+        unchanged in practice (pure function + pad-invariant forward)."""
+        store = self._store
+        for k, v in zip(keys, np.asarray(values, np.float64)):
+            if k in store:
+                store.move_to_end(k)
+            store[k] = float(v)
+        while len(store) > self.capacity:
+            store.popitem(last=False)
+            self.evictions += 1
+
+    # ----------------------------------------------------------------- stats
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"size": len(self._store), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0}
+
+    def clear(self) -> None:
+        self._store.clear()

@@ -1,0 +1,301 @@
+"""Slot-batched PDE inference engine (DESIGN.md §Serving).
+
+The PINN analogue of the LM ``ServingEngine`` (``launch/serve.py``): a
+request is a batch of query points ``(x, t)`` for a named solver, and the
+engine serves mixed traffic from many clients through a fixed pool of
+``slots`` slots of ``slot_points`` points each.
+
+The three invariants the whole design hangs on:
+
+  * **compile-once / shape-stable** — exactly ONE program per
+    ``(solver, dtype, slot-shape)`` triple, AOT-compiled (``jit.lower(...)
+    .compile()``) the first time that triple sees traffic and reused for
+    every subsequent step; its input shape is always the FULL pool
+    ``(slots·slot_points, in_dim)``, so no request mix, queue depth, or
+    request size can ever trigger a recompile.  ``stats["compiles"]``
+    counts program builds and the tests pin it.
+  * **pad-to-slot, bit-identical** — a chunk shorter than a slot pads with
+    an in-domain fill point and idle slots evaluate pure fill; XLA:CPU/TPU
+    GEMMs reduce over the contraction axis per output row, so a row's
+    result does not depend on the other rows and the served values are
+    BIT-identical to a direct ``TensorPinn.u`` forward on the bare points
+    (asserted by tests and the benchmark).
+  * **continuous admission** — requests queue in a deque; every step packs
+    chunks of the head request(s) into whatever slots are free (a request
+    larger than the pool simply spans steps).  A slot's lifetime is one
+    step — PDE point inference has no decode loop — so the pool recycles
+    completely under churn.
+
+Repeated stencil/grid queries short-circuit through the ``StencilCache``
+at submit time: cache hits never occupy a slot, and fully-cached requests
+complete without touching a program (``repro.serving.cache``).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.cache import StencilCache
+from repro.serving.registry import SolverRegistry
+
+__all__ = ["PointRequest", "PdeServingEngine"]
+
+
+@dataclasses.dataclass
+class PointRequest:
+    """One client query: evaluate ``u`` of ``solver`` at ``points``.
+
+    ``out`` is filled in place (same order as ``points``); ``done`` flips
+    when every point is served.  ``latency_s`` covers submit → completion,
+    including queue wait — the number the benchmark's p50/p99 reports.
+    """
+
+    solver: str
+    points: np.ndarray                    # (n, in_dim)
+    dtype: Any = np.float32
+    out: np.ndarray | None = None         # (n,) served u-values
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    # internal bookkeeping (engine-owned)
+    _miss_idx: np.ndarray | None = None   # positions still to compute
+    _keys: list | None = None             # cache keys of the misses
+    _cursor: int = 0                      # misses packed into slots so far
+    _inflight: int = 0                    # chunks currently in slots
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One occupied slot: a chunk of a request's miss-points."""
+
+    req: PointRequest
+    offset: int     # chunk start within req._miss_idx
+    count: int      # chunk length (<= slot_points)
+
+
+class PdeServingEngine:
+    """Continuous-batching point-query server over a ``SolverRegistry``."""
+
+    def __init__(self, registry: SolverRegistry, slots: int = 8,
+                 slot_points: int = 256,
+                 cache: StencilCache | None = None,
+                 enable_cache: bool = True):
+        if slots <= 0 or slot_points <= 0:
+            raise ValueError("slots and slot_points must be positive")
+        self.registry = registry
+        self.slots = slots
+        self.slot_points = slot_points
+        self.cache = cache if cache is not None else (
+            StencilCache() if enable_cache else None)
+        # deque admission (the LM engine's list.pop(0) was O(n) per admit)
+        self.queue: collections.deque[PointRequest] = collections.deque()
+        self.active: list[_Slot | None] = [None] * slots
+        self._programs: dict = {}      # (solver, dtype, S, C) -> executable
+        self._fill: dict = {}          # solver -> in-domain fill point
+        self.stats = {"compiles": 0, "steps": 0, "program_runs": 0,
+                      "points_served": 0, "points_padded": 0,
+                      "requests_done": 0, "peak_active_slots": 0}
+
+    # ------------------------------------------------------------ programs
+    def _pool_shape(self, in_dim: int) -> tuple:
+        return (self.slots * self.slot_points, in_dim)
+
+    def _program(self, solver_name: str, dtype):
+        """The compiled full-pool forward for (solver, dtype) — built (and
+        counted) once, then a pure executable: calling it can never
+        recompile, and a shape drift would be a hard error rather than a
+        silent recompile (AOT executables reject mismatched shapes)."""
+        key = (solver_name, np.dtype(dtype).name, self.slots,
+               self.slot_points)
+        exe = self._programs.get(key)
+        if exe is None:
+            solver = self.registry.get(solver_name)
+            params, noise = solver.params, solver.noise
+            if np.dtype(dtype) != np.float32:
+                # lower-precision serving: cast the frozen params once at
+                # build time, not per step
+                cast = lambda x: (x.astype(dtype)
+                                  if jnp.issubdtype(x.dtype, jnp.floating)
+                                  else x)
+                params = jax.tree.map(cast, params)
+                noise = (jax.tree.map(cast, noise)
+                         if noise is not None else None)
+            model = solver.model
+            fwd = jax.jit(lambda pts: model.u(params, pts, noise))
+            spec = jax.ShapeDtypeStruct(self._pool_shape(solver.in_dim),
+                                        np.dtype(dtype))
+            exe = fwd.lower(spec).compile()
+            self._programs[key] = exe
+            self.stats["compiles"] += 1
+        return exe
+
+    def warmup(self, solver_name: str | None = None,
+               dtype=np.float32) -> None:
+        """Build AND execute the (solver, dtype, slot-shape) program(s) on
+        a pure-fill pool, so the first real request pays neither the XLA
+        compile nor the first-dispatch setup.  ``None`` warms every
+        registered solver."""
+        names = (self.registry.names() if solver_name is None
+                 else (solver_name,))
+        for name in names:
+            exe = self._program(name, dtype)
+            in_dim = self.registry.get(name).in_dim
+            buf = np.broadcast_to(
+                self._fill_point(name),
+                self._pool_shape(in_dim)).astype(np.dtype(dtype), copy=True)
+            jax.block_until_ready(exe(jnp.asarray(buf)))
+
+    def _fill_point(self, solver_name: str) -> np.ndarray:
+        """A fixed in-domain point for pad rows and idle slots (any valid
+        collocation point works — its outputs are discarded; it just must
+        not produce NaN/inf that could poison reductions elsewhere)."""
+        p = self._fill.get(solver_name)
+        if p is None:
+            problem = self.registry.get(solver_name).problem
+            p = np.asarray(problem.sample_collocation(
+                jax.random.PRNGKey(0), 1), np.float64)[0]
+            self._fill[solver_name] = p
+        return p
+
+    # -------------------------------------------------------------- submit
+    def submit(self, req: PointRequest) -> PointRequest:
+        """Enqueue a request; cache hits are served immediately and only
+        the misses ever occupy slots.  Returns the request (its ``out`` /
+        ``done`` fields are updated in place as the engine steps)."""
+        pts = np.asarray(req.points, np.float64)
+        if pts.ndim != 2 or pts.shape[0] == 0:
+            raise ValueError(f"points must be (n>0, in_dim), "
+                             f"got {pts.shape}")
+        solver = self.registry.get(req.solver)
+        if pts.shape[1] != solver.in_dim:
+            raise ValueError(f"solver {req.solver!r} takes in_dim="
+                             f"{solver.in_dim} points, got {pts.shape}")
+        req.points = pts
+        req.t_submit = time.perf_counter()
+        req.out = np.empty(pts.shape[0], np.float64)
+        if self.cache is not None:
+            keys = self.cache.keys_for(req.solver, req.dtype, pts)
+            hit_idx, hit_vals, miss_idx = self.cache.lookup(keys)
+            if len(hit_idx):
+                req.out[hit_idx] = hit_vals
+            req._miss_idx = miss_idx
+            req._keys = keys
+        else:
+            req._miss_idx = np.arange(pts.shape[0])
+            req._keys = None
+        if len(req._miss_idx) == 0:       # fully cached: done at submit
+            req.done = True
+            req.t_done = time.perf_counter()
+            self.stats["requests_done"] += 1
+            return req
+        self.queue.append(req)
+        return req
+
+    # ---------------------------------------------------------- step logic
+    def _admit(self) -> None:
+        """Pack head-of-queue chunks into free slots (continuous
+        admission): the head request may leave partially packed — its
+        remaining points wait for the next step's free slots."""
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        while free and self.queue:
+            req = self.queue[0]
+            remaining = len(req._miss_idx) - req._cursor
+            count = min(remaining, self.slot_points)
+            self.active[free.pop()] = _Slot(req, req._cursor, count)
+            req._cursor += count
+            req._inflight += 1
+            if req._cursor >= len(req._miss_idx):
+                self.queue.popleft()
+
+    def step(self) -> int:
+        """One engine step: admit, evaluate every (solver, dtype) group's
+        full-pool program once, scatter results, retire slots.  Returns
+        the number of request points served this step."""
+        self._admit()
+        groups: dict = {}
+        for s, slot in enumerate(self.active):
+            if slot is not None:
+                groups.setdefault(
+                    (slot.req.solver, np.dtype(slot.req.dtype).name),
+                    []).append(s)
+        if not groups:
+            return 0
+        self.stats["steps"] += 1
+        self.stats["peak_active_slots"] = max(
+            self.stats["peak_active_slots"],
+            sum(len(v) for v in groups.values()))
+        served = 0
+        for (solver_name, dtype_name), slot_ids in groups.items():
+            dtype = np.dtype(dtype_name)
+            exe = self._program(solver_name, dtype)
+            in_dim = self.registry.get(solver_name).in_dim
+            # full-pool input: fill point everywhere, then overwrite the
+            # group's slots with their chunks (pad-to-slot)
+            buf = np.broadcast_to(
+                self._fill_point(solver_name),
+                (self.slots, self.slot_points, in_dim)).astype(
+                    dtype, copy=True)
+            for s in slot_ids:
+                slot = self.active[s]
+                idx = slot.req._miss_idx[slot.offset:slot.offset
+                                         + slot.count]
+                buf[s, :slot.count] = slot.req.points[idx]
+            u = np.asarray(exe(jnp.asarray(
+                buf.reshape(self._pool_shape(in_dim))))).reshape(
+                    self.slots, self.slot_points)
+            self.stats["program_runs"] += 1
+            for s in slot_ids:
+                slot = self.active[s]
+                req = slot.req
+                idx = req._miss_idx[slot.offset:slot.offset + slot.count]
+                vals = u[s, :slot.count]
+                req.out[idx] = vals
+                if self.cache is not None:
+                    self.cache.insert([req._keys[i] for i in idx], vals)
+                served += slot.count
+                self.stats["points_padded"] += self.slot_points - slot.count
+                req._inflight -= 1
+                if req._inflight == 0 and \
+                        req._cursor >= len(req._miss_idx):
+                    req.done = True
+                    req.t_done = time.perf_counter()
+                    self.stats["requests_done"] += 1
+                self.active[s] = None     # slot recycles next step
+            # idle slots of this group's program run are pure padding
+            self.stats["points_padded"] += \
+                (self.slots - len(slot_ids)) * self.slot_points
+        self.stats["points_served"] += served
+        return served
+
+    def run(self, max_steps: int | None = None) -> int:
+        """Drain the queue: step until nothing is queued or in flight.
+        Returns total points served."""
+        total = 0
+        for _ in (range(max_steps) if max_steps is not None
+                  else itertools.count()):
+            if not self.queue and all(s is None for s in self.active):
+                break
+            total += self.step()
+        return total
+
+    # ----------------------------------------------------------- reporting
+    def serving_stats(self) -> dict:
+        out = dict(self.stats)
+        out["queued"] = len(self.queue)
+        out["programs"] = sorted(
+            "|".join(map(str, k)) for k in self._programs)
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out

@@ -1,0 +1,150 @@
+"""Solver registry: named, inference-ready ``TensorPinn`` solvers.
+
+Training happens once; serving loads the result and freezes it.  A
+``LoadedSolver`` is a checkpoint (or in-memory params) pushed through the
+one-time preparation the request path must never pay for:
+
+  * ``TensorPinn.prepare_params`` — TONN mesh→TT-core densification hoisted
+    out of the hot path entirely: every MZI mesh is densified ONCE at load,
+    so the compiled serving program contracts plain TT-cores (the training
+    stack re-densifies per loss evaluation because the phases move; a
+    served solver's phases never move again),
+  * hardware-noise reconstruction — fabrication noise is sampled once per
+    physical chip from the training seed (``fold_in(PRNGKey(seed), 99)``,
+    the exact ``launch/train.py`` derivation) and, for TONN, baked into the
+    densified cores; ONN solvers keep it alongside the params,
+  * solver identity — ``launch/train.py`` writes the ``PINNConfig`` + PDE
+    name + seed into checkpoint ``meta.json`` under ``"pinn"``
+    (``core.pinn.config_to_meta``), so ``load_checkpoint(name, dir)`` needs
+    no config side-channel.  Pre-metadata checkpoints still load by passing
+    ``cfg=`` explicitly.
+
+The registry itself is a plain name→solver map consumed by
+``repro.serving.engine.PdeServingEngine``; it never compiles anything —
+compilation is the engine's job, keyed on (solver, dtype, slot-shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax
+
+from repro.checkpoint import read_checkpoint_meta, restore_checkpoint
+from repro.core import pinn
+
+__all__ = ["LoadedSolver", "SolverRegistry"]
+
+
+@dataclasses.dataclass
+class LoadedSolver:
+    """One inference-ready solver: prepared params, reconstructed noise,
+    and the model/problem objects the engine compiles against."""
+
+    name: str
+    model: pinn.TensorPinn
+    params: dict                 # prepared: TONN cores densified at load
+    noise: dict | None = None    # ONN hardware noise (TONN bakes it in)
+    step: int | None = None      # checkpoint step, None for in-memory
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def problem(self):
+        return self.model.problem
+
+    @property
+    def in_dim(self) -> int:
+        return self.model.in_dim
+
+
+class SolverRegistry:
+    """Name-keyed ``LoadedSolver`` store (the PINN analogue of an LM model
+    server's model registry)."""
+
+    def __init__(self):
+        self._solvers: dict[str, LoadedSolver] = {}
+
+    # ---------------------------------------------------------------- access
+    def get(self, name: str) -> LoadedSolver:
+        if name not in self._solvers:
+            raise KeyError(f"unknown solver {name!r}; "
+                           f"loaded: {sorted(self._solvers)}")
+        return self._solvers[name]
+
+    def names(self) -> tuple:
+        return tuple(sorted(self._solvers))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._solvers
+
+    def __len__(self) -> int:
+        return len(self._solvers)
+
+    # -------------------------------------------------------------- register
+    def register(self, name: str, model: pinn.TensorPinn, params: dict,
+                 hw_noise: dict | None = None, step: int | None = None,
+                 meta: dict | None = None) -> LoadedSolver:
+        """Register an in-memory solver (tests, freshly trained params).
+
+        Densification and noise-baking run here, once; the stored params
+        are what every compiled serving program closes over.
+        """
+        prepared, eff_noise = model.prepare_params(params, hw_noise)
+        prepared = jax.tree.map(jax.numpy.asarray, prepared)
+        solver = LoadedSolver(name=name, model=model, params=prepared,
+                              noise=eff_noise, step=step, meta=meta or {})
+        self._solvers[name] = solver
+        return solver
+
+    def load_checkpoint(self, name: str, directory: str | os.PathLike,
+                        cfg: pinn.PINNConfig | None = None,
+                        step: int | None = None,
+                        noise_seed: int | None = None) -> LoadedSolver:
+        """Load a trained ``TensorPinn`` checkpoint written by
+        ``launch/train.py`` and register it under ``name``.
+
+        Self-describing checkpoints (meta ``"pinn"`` key) need nothing
+        else; older checkpoints need ``cfg`` (and ``noise_seed`` if the
+        noise model was on).  Only the ``params`` subtree is restored —
+        optimizer/ZO state stays on disk.
+        """
+        meta = read_checkpoint_meta(directory, step)
+        step = meta["step"]  # pin: meta and arrays must be one checkpoint
+        if cfg is None:
+            if "pinn" not in meta:
+                raise ValueError(
+                    f"checkpoint {directory} predates solver metadata "
+                    "(no 'pinn' key in meta.json); pass cfg= explicitly")
+            cfg = pinn.config_from_meta(meta["pinn"])
+        model = pinn.TensorPinn(cfg)
+        # init gives the restore target's tree structure/shapes; values are
+        # overwritten by the checkpoint
+        like = model.init(jax.random.PRNGKey(0))
+        restored, meta = restore_checkpoint(directory, {"params": like},
+                                            step)
+        hw_noise = None
+        if cfg.noise.enabled:
+            seed = meta.get("seed", noise_seed)
+            if seed is None:
+                raise ValueError(
+                    "noise-enabled checkpoint without a recorded training "
+                    "seed; pass noise_seed= to reconstruct the chip noise")
+            # the exact launch/train.py derivation: one chip, fixed noise
+            hw_noise = model.sample_noise(
+                jax.random.fold_in(jax.random.PRNGKey(seed), 99))
+        return self.register(name, model, restored["params"],
+                             hw_noise=hw_noise, step=meta.get("step"),
+                             meta=meta)
+
+    def register_fresh(self, name: str, cfg: pinn.PINNConfig,
+                       seed: int = 0) -> LoadedSolver:
+        """Register a freshly initialized (UNTRAINED) solver — benchmark
+        and smoke-test convenience; inference cost is identical to a
+        trained solver's."""
+        model = pinn.TensorPinn(cfg)
+        key = jax.random.PRNGKey(seed)
+        params = model.init(key)
+        hw_noise = model.sample_noise(jax.random.fold_in(key, 99))
+        return self.register(name, model, params, hw_noise=hw_noise)

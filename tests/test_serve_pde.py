@@ -1,0 +1,317 @@
+"""Serving runtime: bit-identity vs direct inference, mixed-problem slot
+batching, pad masking, cache hit/eviction, slot recycling under churn,
+compile-once (no recompiles across steps), and checkpoint-metadata loading
+(DESIGN.md §Serving)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import read_checkpoint_meta, save_checkpoint
+from repro.core import pinn
+from repro.serving import (PdeServingEngine, PointRequest, SolverRegistry,
+                           StencilCache)
+
+
+def _registry(modes=(("heat", "heat-10d", "tt"),)):
+    reg = SolverRegistry()
+    for i, (name, pde, mode) in enumerate(modes):
+        cfg = pinn.PINNConfig(hidden=16, mode=mode, tt_rank=2, tt_L=3,
+                              pde=pde)
+        reg.register_fresh(name, cfg, seed=i)
+    return reg
+
+
+def _query(reg, name, n, seed=0):
+    prob = reg.get(name).problem
+    return np.asarray(prob.sample_collocation(jax.random.PRNGKey(seed), n),
+                      np.float32)
+
+
+def _direct(reg, name, pts):
+    s = reg.get(name)
+    return np.asarray(jax.jit(
+        lambda p: s.model.u(s.params, p, s.noise))(jnp.asarray(pts)))
+
+
+@pytest.mark.parametrize("mode", ["tt", "tonn", "dense"])
+def test_served_u_bit_identical_to_direct_forward(mode):
+    """The acceptance contract: engine output == direct TensorPinn forward
+    bit-for-bit, despite pad-to-slot batching (pad-invariance of the
+    row-wise contraction)."""
+    reg = _registry([("s", "heat-10d", mode)])
+    eng = PdeServingEngine(reg, slots=3, slot_points=32)
+    pts = _query(reg, "s", 50, seed=7)   # spans 2 slots, 3rd stays idle
+    req = eng.submit(PointRequest("s", pts))
+    eng.run()
+    assert req.done
+    np.testing.assert_array_equal(req.out.astype(np.float32),
+                                  _direct(reg, "s", pts))
+
+
+def test_mixed_problem_batching_one_program_each():
+    """Interleaved traffic for two different PDEs (different in_dim!) is
+    served concurrently from one pool; exactly one program per solver."""
+    reg = _registry([("heat", "heat-10d", "tt"), ("hjb", "hjb-20d", "tt")])
+    eng = PdeServingEngine(reg, slots=4, slot_points=16)
+    reqs = []
+    for i in range(10):
+        name = ("heat", "hjb")[i % 2]
+        reqs.append(eng.submit(
+            PointRequest(name, _query(reg, name, 5 + 7 * i, seed=i))))
+    eng.run()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r.out.astype(np.float32),
+                                      _direct(reg, r.solver, r.points))
+    assert eng.stats["compiles"] == 2
+    assert set(eng.serving_stats()["programs"]) == {
+        "heat|float32|4|16", "hjb|float32|4|16"}
+
+
+def test_pad_slot_masking():
+    """A request far smaller than a slot: pad rows must not leak into the
+    output, and the output must keep request order."""
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=64)
+    pts = _query(reg, "heat", 3, seed=3)
+    req = eng.submit(PointRequest("heat", pts))
+    served = eng.run()
+    assert req.done and req.out.shape == (3,)
+    assert served == 3                      # padding never counted as served
+    np.testing.assert_array_equal(req.out.astype(np.float32),
+                                  _direct(reg, "heat", pts))
+    # the pool shape is fixed: 2*64 evaluated, 3 useful
+    assert eng.stats["points_padded"] == 2 * 64 - 3
+
+
+def test_request_larger_than_pool_spans_steps():
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)   # pool = 16 points
+    pts = _query(reg, "heat", 50, seed=11)
+    req = eng.submit(PointRequest("heat", pts))
+    eng.run()
+    assert req.done
+    assert eng.stats["steps"] >= 4          # ceil(50/16) steps minimum
+    np.testing.assert_array_equal(req.out.astype(np.float32),
+                                  _direct(reg, "heat", pts))
+
+
+def test_cache_hit_and_value_correctness():
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=32)
+    pts = _query(reg, "heat", 20, seed=5)
+    r1 = eng.submit(PointRequest("heat", pts))
+    eng.run()
+    runs = eng.stats["program_runs"]
+    # identical resubmit: served at submit time, no program run, same bits
+    r2 = eng.submit(PointRequest("heat", pts))
+    assert r2.done                          # completed without stepping
+    assert eng.stats["program_runs"] == runs
+    np.testing.assert_array_equal(r1.out, r2.out)
+    st = eng.cache.stats()
+    assert st["hits"] == 20 and st["misses"] == 20
+    # partial overlap: only the fresh points occupy slots
+    pts2 = np.concatenate([pts[:10], _query(reg, "heat", 6, seed=6)])
+    r3 = eng.submit(PointRequest("heat", pts2))
+    eng.run()
+    assert r3.done
+    np.testing.assert_array_equal(r3.out.astype(np.float32),
+                                  _direct(reg, "heat", pts2))
+    assert eng.cache.stats()["hits"] == 30
+
+
+def test_cache_lru_eviction():
+    cache = StencilCache(capacity=8)
+    keys = cache.keys_for("s", np.float32, np.arange(24.0).reshape(12, 2))
+    cache.insert(keys[:8], np.arange(8.0))
+    _, _, miss = cache.lookup(keys[:2])     # refresh 0,1 to MRU
+    assert len(miss) == 0
+    cache.insert(keys[8:], np.arange(8.0, 12.0))   # evict 4 LRU: keys 2..5
+    assert len(cache) == 8 and cache.evictions == 4
+    hit, vals, miss = cache.lookup(keys)
+    assert sorted(miss.tolist()) == [2, 3, 4, 5]
+    np.testing.assert_array_equal(sorted(hit.tolist()),
+                                  [0, 1, 6, 7, 8, 9, 10, 11])
+
+
+def test_cache_quantization_and_dtype_isolation():
+    cache = StencilCache(capacity=16, quantum=1e-3)
+    p = np.array([[0.5, 0.5]])
+    cache.insert(cache.keys_for("s", np.float32, p), np.array([1.25]))
+    # same cell → hit; different cell / dtype / solver → miss
+    hit, vals, _ = cache.lookup(cache.keys_for("s", np.float32,
+                                               p + 1e-5))
+    assert len(hit) == 1 and vals[0] == 1.25
+    for other in (cache.keys_for("s", np.float32, p + 1e-2),
+                  cache.keys_for("s", np.float64, p),
+                  cache.keys_for("t", np.float32, p)):
+        _, _, miss = cache.lookup(other)
+        assert len(miss) == 1
+
+
+def test_slot_recycling_under_churn():
+    """Far more requests than slots: every slot is reused many times and
+    the pool never grows."""
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=16,
+                           enable_cache=False)
+    reqs = [eng.submit(PointRequest("heat", _query(reg, "heat",
+                                                   1 + (i * 5) % 30,
+                                                   seed=100 + i)))
+            for i in range(25)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.stats["peak_active_slots"] <= 2
+    assert eng.stats["steps"] >= len(reqs) // 2
+    for r in reqs[::6]:
+        np.testing.assert_array_equal(r.out.astype(np.float32),
+                                      _direct(reg, "heat", r.points))
+
+
+def test_compile_once_across_steps_and_request_mixes():
+    """The compile-once contract: after the first step touches a (solver,
+    dtype, slot-shape) triple, NO request size, queue depth, or resubmit
+    pattern may compile again."""
+    reg = _registry([("heat", "heat-10d", "tt"), ("hjb", "hjb-10d", "tonn")])
+    eng = PdeServingEngine(reg, slots=3, slot_points=8)
+    eng.warmup()
+    assert eng.stats["compiles"] == 2
+    for i in range(12):                      # wildly varying request sizes
+        name = ("heat", "hjb")[i % 2]
+        eng.submit(PointRequest(name, _query(reg, name, 1 + 13 * i,
+                                             seed=i)))
+        eng.step()
+    eng.run()
+    assert eng.stats["compiles"] == 2        # zero recompiles under churn
+    assert eng.stats["steps"] > 1
+
+
+def test_latency_timestamps():
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=16)
+    req = eng.submit(PointRequest("heat", _query(reg, "heat", 10)))
+    eng.run()
+    assert req.t_done >= req.t_submit and req.latency_s >= 0
+
+
+def test_registry_errors():
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    with pytest.raises(KeyError):
+        eng.submit(PointRequest("nope", np.zeros((1, 11), np.float32)))
+    with pytest.raises(ValueError):          # wrong in_dim
+        eng.submit(PointRequest("heat", np.zeros((4, 3), np.float32)))
+    with pytest.raises(ValueError):          # empty batch
+        eng.submit(PointRequest("heat", np.zeros((0, 11), np.float32)))
+
+
+# ------------------------------------------------------- checkpoint loading
+
+def _save_solver_ckpt(tmp_path, cfg, seed=0, with_meta=True):
+    model = pinn.TensorPinn(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    extra = ({"pinn": pinn.config_to_meta(cfg), "pde": model.problem.name,
+              "seed": seed} if with_meta else {})
+    save_checkpoint(tmp_path, 5, {"params": params,
+                                  "zo": {"key": key}}, extra)
+    return model, params
+
+
+def test_load_checkpoint_by_name_no_config_side_channel(tmp_path):
+    """Self-describing checkpoints: the registry reconstructs the arch and
+    problem from meta.json alone; optimizer state on disk is ignored."""
+    cfg = pinn.PINNConfig(hidden=16, mode="tonn", tt_rank=2, tt_L=3,
+                          pde="heat-10d")
+    model, params = _save_solver_ckpt(tmp_path, cfg, seed=3)
+    reg = SolverRegistry()
+    s = reg.load_checkpoint("heat", tmp_path)
+    assert s.problem.name == "heat-10d" and s.model.cfg.mode == "tonn"
+    assert s.step == 5
+    pts = np.asarray(model.problem.sample_collocation(
+        jax.random.PRNGKey(1), 9), np.float32)
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    req = eng.submit(PointRequest("heat", pts))
+    eng.run()
+    direct = np.asarray(jax.jit(
+        lambda p: model.u(params, p))(jnp.asarray(pts)))
+    np.testing.assert_array_equal(req.out.astype(np.float32), direct)
+
+
+def test_load_noise_enabled_checkpoint_reconstructs_chip(tmp_path):
+    """Noise-on solvers: the recorded seed regenerates the exact fixed
+    fabrication noise of launch/train.py's chip."""
+    from repro.core.photonic import NoiseModel
+    cfg = pinn.PINNConfig(hidden=16, mode="onn", pde="heat-10d",
+                          noise=NoiseModel(enabled=True))
+    model, params = _save_solver_ckpt(tmp_path, cfg, seed=4)
+    hw = model.sample_noise(jax.random.fold_in(jax.random.PRNGKey(4), 99))
+    reg = SolverRegistry()
+    reg.load_checkpoint("noisy", tmp_path)
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    pts = np.asarray(model.problem.sample_collocation(
+        jax.random.PRNGKey(2), 6), np.float32)
+    req = eng.submit(PointRequest("noisy", pts))
+    eng.run()
+    direct = np.asarray(jax.jit(
+        lambda p: model.u(params, p, hw))(jnp.asarray(pts)))
+    np.testing.assert_array_equal(req.out.astype(np.float32), direct)
+
+
+def test_old_checkpoint_without_meta_needs_explicit_cfg(tmp_path):
+    """Pre-metadata checkpoints stay loadable — with cfg= passed the old
+    way; without it the registry fails with a pointed message."""
+    cfg = pinn.PINNConfig(hidden=16, mode="tt", tt_rank=2, tt_L=3,
+                          pde="hjb-10d")
+    _save_solver_ckpt(tmp_path, cfg, with_meta=False)
+    reg = SolverRegistry()
+    with pytest.raises(ValueError, match="pinn"):
+        reg.load_checkpoint("old", tmp_path)
+    s = reg.load_checkpoint("old", tmp_path, cfg=cfg)
+    assert s.problem.name == "hjb-10d"
+
+
+def test_config_meta_roundtrip():
+    from repro.core.photonic import NoiseModel
+    cfg = pinn.PINNConfig(hidden=48, mode="tonn", tt_rank=2, tt_L=4,
+                          pde="black-scholes-100d", deriv="fd_fast",
+                          use_fused_kernel=True, fd_step=2e-2,
+                          noise=NoiseModel(enabled=True, gamma_std=0.004))
+    meta = pinn.config_to_meta(cfg)
+    import json
+    assert pinn.config_from_meta(json.loads(json.dumps(meta))) == cfg
+    # forward compatibility: unknown keys from a newer writer are ignored
+    meta["from_the_future"] = 1
+    meta["noise"]["also_new"] = 2
+    assert pinn.config_from_meta(meta) == cfg
+
+
+def test_trainer_writes_solver_metadata(tmp_path):
+    """launch/train.py checkpoints are self-describing end to end."""
+    from repro.launch import train
+    train.main(["--arch", "tensor-pinn", "--pde", "hjb-10d", "--reduced",
+                "--steps", "2", "--batch", "8", "--zo-samples", "2",
+                "--hidden", "16", "--log-every", "10",
+                "--ckpt-dir", str(tmp_path)])
+    meta = read_checkpoint_meta(tmp_path)
+    assert meta["pde"] == "hjb-10d" and meta["seed"] == 0
+    cfg = pinn.config_from_meta(meta["pinn"])
+    assert cfg.pde == "hjb-10d" and cfg.hidden == 16
+    reg = SolverRegistry()
+    s = reg.load_checkpoint("hjb", tmp_path)
+    assert s.step == 2
+
+
+def test_lm_engine_queue_is_deque():
+    """The O(n) list.pop(0) admission regression guard for BOTH engines."""
+    from collections import deque
+    from repro.launch.serve import ServingEngine
+    assert ServingEngine.__init__.__defaults__  # importable, no model init
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=1, slot_points=4)
+    assert isinstance(eng.queue, deque)
+    import inspect
+    src = inspect.getsource(ServingEngine)
+    assert "popleft" in src and "queue.pop(0)" not in src
