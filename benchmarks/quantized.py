@@ -1,0 +1,294 @@
+"""Quantized training/inference sweep: block-scaled int8/fp8 TT cores and
+finite-bit DAC phases vs the f32 baseline (DESIGN.md §Quantization).
+
+Grid: bits × {tt, tonn} × {heat-10d, hjb-20d}.  The ``bits`` arms are
+
+  * ``f32``       — quantization off (the baseline every ratio is against)
+  * ``int8``      — block-scaled int8 weights (block 32, 1.125 B/param)
+  * ``fp8_e4m3``  — block-scaled fp8-e4m3 weights (same block format)
+
+and tonn arms additionally snap the commanded MZI phases to an 8-bit DAC
+grid (``phase_bits=8`` — the hardware-faithful knob; tt has no phase
+domain).  Per cell:
+
+  * **step time** — the jitted fused stacked residual loss (the ZO step's
+    dominant cost: N+1 = 11 SPSA evaluations in one program), quantized
+    vs f32.  On the CPU ``ref`` path fake-quant ADDS work, so this column
+    documents the QAT overhead; the win on CPU CI is memory.
+  * **weight memory** — resident TT-core bytes in the block-scaled format
+    (1 narrow byte/value + one f32 scale per block) vs f32: 3.56× cut at
+    block 32, the ≥2× gate's deterministic arm.
+  * **final residual** — a short on-chip ZO-signSGD run per cell through
+    ``table1_hjb.run_row(quant=...)``; the gate allows ≤1 accuracy notch
+    (one decade of final validation MSE, DESIGN.md §Quantization) vs the
+    same-budget f32 cell.
+
+Gates (--ci): every cell ≥2× memory-or-speed vs f32; every cell within
+one accuracy notch; the f32 OFF-path invariant (a disabled QuantConfig is
+bit-identical to the default config on u-stencils AND stacked losses);
+f32 serving bit-identical to a direct forward with quantized traffic in
+flight; and ZERO steady-state recompiles for quantized serving programs.
+Emits ``BENCH_quantized.json`` (archived by CI).
+
+    PYTHONPATH=src python benchmarks/quantized.py --ci
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.table1_hjb import run_row
+except ImportError:  # invoked as `python benchmarks/quantized.py`
+    from table1_hjb import run_row
+from repro.core import pinn
+from repro.kernels import quant as quant_lib
+
+PDES = ("heat-10d", "hjb-20d")
+MODES = ("tt", "tonn")
+# one decade of final validation MSE = the documented accuracy notch
+NOTCH = 10.0
+
+
+def quant_arms(mode: str, block: int = 32,
+               phase_bits: int = 8) -> dict:
+    """The ``bits`` axis for one solver mode.  tonn rows get the DAC knob
+    on top of weight quantization; tt has no phase domain."""
+    pb = phase_bits if mode == "tonn" else None
+    return {
+        "f32": None,
+        "int8": quant_lib.QuantConfig(enabled=True, dtype="int8",
+                                      block=block, phase_bits=pb),
+        "fp8_e4m3": quant_lib.QuantConfig(enabled=True, dtype="fp8_e4m3",
+                                          block=block, phase_bits=pb),
+    }
+
+
+def core_weight_bytes(model: pinn.TensorPinn, qcfg) -> int:
+    """Resident TT-core working-set bytes: every element of every layer's
+    core chain (tt: the stored params; tonn: the densified compute set the
+    kernels hold in VMEM/HBM) at the arm's bytes/param."""
+    n = sum(int(np.prod(shape)) for spec in model.specs
+            for shape in spec.core_shapes)
+    bpp = (4.0 if qcfg is None
+           else quant_lib.quantized_bytes_per_param(qcfg))
+    return int(round(n * bpp))
+
+
+def stacked_step_ms(model: pinn.TensorPinn, params, xt,
+                    num_samples: int = 10, repeats: int = 5) -> float:
+    """Wall time of the fused stacked loss — the N+1-evaluation program
+    that dominates one ZO-signSGD step."""
+    P = num_samples + 1
+    sp = jax.tree.map(lambda l: jnp.broadcast_to(l, (P,) + l.shape), params)
+    f = jax.jit(lambda s: pinn.residual_losses_stacked(model, s, xt))
+    jax.block_until_ready(f(sp))  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        r = f(sp)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / repeats * 1e3
+
+
+def run_cell(pde: str, mode: str, arm: str, qcfg, hidden: int, batch: int,
+             epochs: int, seed: int = 0) -> dict:
+    cfg = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=2, tt_L=3,
+                          pde=pde, deriv="fd_fast",
+                          **({"quant": qcfg} if qcfg is not None else {}))
+    model = pinn.TensorPinn(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    xt = model.problem.sample_collocation(jax.random.fold_in(key, 1), batch)
+    step_ms = stacked_step_ms(model, params, xt)
+    row = run_row(mode, on_chip=True, noise=False, hidden=hidden,
+                  epochs=epochs, batch=batch, seed=seed, pde=pde,
+                  quant=qcfg)
+    return {
+        "pde": pde, "mode": mode, "arm": arm,
+        "quant_tag": "" if qcfg is None else qcfg.tag(),
+        "step_ms": round(step_ms, 2),
+        "core_bytes": core_weight_bytes(model, qcfg),
+        "final_loss": row["final_loss"],
+        "val_mse": row["val_mse_ideal"],
+        "train_s": row["seconds"],
+    }
+
+
+def check_f32_off_path(pde: str = "heat-10d", mode: str = "tonn",
+                       batch: int = 16, seed: int = 0) -> dict:
+    """The f32 invariant: a DISABLED QuantConfig (even one carrying int8/
+    phase_bits settings) is bit-identical to the default config on
+    u-stencils and on the fused stacked losses."""
+    base = pinn.PINNConfig(hidden=32, mode=mode, tt_rank=2, tt_L=3, pde=pde,
+                           deriv="fd_fast")
+    m0 = pinn.TensorPinn(base)
+    mdis = pinn.TensorPinn(dataclasses.replace(
+        base, quant=quant_lib.QuantConfig(enabled=False, dtype="int8",
+                                          phase_bits=8)))
+    key = jax.random.PRNGKey(seed)
+    params = m0.init(key)
+    xt = m0.problem.sample_collocation(jax.random.fold_in(key, 1), batch)
+    u0 = m0.fd_u_stencil(m0.prepare_params(params, None)[0], xt, m0.fd_step)
+    u1 = mdis.fd_u_stencil(mdis.prepare_params(params, None)[0], xt,
+                           mdis.fd_step)
+    sp = jax.tree.map(lambda l: jnp.broadcast_to(l, (3,) + l.shape), params)
+    l0 = pinn.residual_losses_stacked(m0, sp, xt)
+    l1 = pinn.residual_losses_stacked(mdis, sp, xt)
+    return {
+        "stencil_bit_identical": bool(
+            np.array_equal(np.asarray(u0), np.asarray(u1))),
+        "losses_bit_identical": bool(
+            np.array_equal(np.asarray(l0), np.asarray(l1))),
+    }
+
+
+def check_serving(hidden: int = 32, seed: int = 0) -> dict:
+    """Serving under mixed f32/quantized traffic: the f32 program's output
+    stays bit-identical to a direct forward, and repeated quantized
+    submits never recompile (one program per quant config, steady state
+    free)."""
+    from repro.serving import PdeServingEngine, PointRequest, SolverRegistry
+    qcfg = quant_lib.QuantConfig(enabled=True, dtype="int8", block=32)
+    reg = SolverRegistry()
+    reg.register_fresh("heat", pinn.PINNConfig(
+        hidden=hidden, mode="tt", tt_rank=2, tt_L=3, pde="heat-10d"),
+        seed=seed)
+    eng = PdeServingEngine(reg, slots=2, slot_points=32, enable_cache=False)
+    s = reg.get("heat")
+    pts = np.asarray(s.problem.sample_collocation(
+        jax.random.PRNGKey(seed + 7), 40), np.float32)
+    r_f32 = eng.submit(PointRequest("heat", pts))
+    r_q = eng.submit(PointRequest("heat", pts, quant=qcfg))
+    eng.run()
+    direct = np.asarray(jax.jit(
+        lambda p: s.model.u(s.params, p, s.noise))(jnp.asarray(pts)))
+    compiles_after_first = eng.stats["compiles"]
+    for i in range(4):  # steady state: resubmits of both flavors
+        eng.submit(PointRequest("heat", pts))
+        eng.submit(PointRequest("heat", pts, quant=qcfg))
+        eng.run()
+    return {
+        "f32_bit_identical": bool(
+            np.array_equal(r_f32.out.astype(np.float32), direct)),
+        "quant_differs_from_f32": bool((r_q.out != r_f32.out).any()),
+        "programs": compiles_after_first,
+        "steady_state_recompiles": eng.stats["compiles"]
+        - compiles_after_first,
+    }
+
+
+def run(pdes=PDES, modes=MODES, hidden: int = 32, batch: int = 16,
+        epochs: int = 40, block: int = 32, phase_bits: int = 8,
+        seed: int = 0) -> dict:
+    cells = []
+    for pde in pdes:
+        for mode in modes:
+            base = None
+            for arm, qcfg in quant_arms(mode, block=block,
+                                        phase_bits=phase_bits).items():
+                cell = run_cell(pde, mode, arm, qcfg, hidden=hidden,
+                                batch=batch, epochs=epochs, seed=seed)
+                if arm == "f32":
+                    base = cell
+                else:
+                    cell["speedup_vs_f32"] = round(
+                        base["step_ms"] / max(cell["step_ms"], 1e-9), 2)
+                    cell["memory_ratio_vs_f32"] = round(
+                        base["core_bytes"] / cell["core_bytes"], 2)
+                    cell["val_mse_ratio_vs_f32"] = round(
+                        cell["val_mse"] / max(base["val_mse"], 1e-30), 3)
+                cells.append(cell)
+    return {
+        "config": {"pdes": list(pdes), "modes": list(modes),
+                   "hidden": hidden, "batch": batch, "epochs": epochs,
+                   "block": block, "phase_bits": phase_bits,
+                   "accuracy_notch": NOTCH,
+                   "backend": jax.default_backend(),
+                   "kernel_mode_note": "CPU CI runs the ref path: the "
+                   "quant arms' win there is memory (speed column "
+                   "documents fake-quant overhead)"},
+        "cells": cells,
+        "f32_off_path": check_f32_off_path(),
+        "serving": check_serving(hidden=hidden, seed=seed),
+    }
+
+
+def summarize(result: dict) -> list:
+    """Rows for benchmarks/run.py's CSV."""
+    out = []
+    for c in result["cells"]:
+        if c["arm"] == "f32":
+            continue
+        out.append({
+            "name": f"quantized/{c['pde']}-{c['mode']}-{c['arm']}",
+            "us_per_call": round(c["step_ms"] * 1e3, 1),
+            "derived": (f"mem {c['memory_ratio_vs_f32']}x, "
+                        f"speed {c['speedup_vs_f32']}x, "
+                        f"val_mse {c['val_mse']:.2e} "
+                        f"({c['val_mse_ratio_vs_f32']}x f32)"),
+        })
+    return out
+
+
+def assert_gates(result: dict) -> None:
+    off = result["f32_off_path"]
+    assert off["stencil_bit_identical"] and off["losses_bit_identical"], (
+        f"f32 off-path invariant broken: {off}")
+    srv = result["serving"]
+    assert srv["f32_bit_identical"], f"f32 serving drifted: {srv}"
+    assert srv["steady_state_recompiles"] == 0, (
+        f"quantized serving recompiled in steady state: {srv}")
+    for c in result["cells"]:
+        if c["arm"] == "f32":
+            continue
+        tag = f"{c['pde']}/{c['mode']}/{c['arm']}"
+        assert (c["memory_ratio_vs_f32"] >= 2.0
+                or c["speedup_vs_f32"] >= 2.0), (
+            f"{tag}: neither >=2x memory ({c['memory_ratio_vs_f32']}x) "
+            f"nor >=2x speed ({c['speedup_vs_f32']}x)")
+        assert np.isfinite(c["final_loss"]), f"{tag}: diverged"
+        assert c["val_mse_ratio_vs_f32"] <= NOTCH, (
+            f"{tag}: val MSE {c['val_mse']:.3e} is "
+            f"{c['val_mse_ratio_vs_f32']}x the f32 cell — past the "
+            f"{NOTCH}x accuracy notch")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="assert the memory/speed, accuracy-notch, "
+                         "f32-invariant and serving gates after the run")
+    ap.add_argument("--pdes", default=",".join(PDES))
+    ap.add_argument("--modes", default=",".join(MODES))
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--block", type=int, default=32)
+    ap.add_argument("--phase-bits", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_quantized.json")
+    args = ap.parse_args()
+
+    result = run(pdes=tuple(args.pdes.split(",")),
+                 modes=tuple(args.modes.split(",")),
+                 hidden=args.hidden, batch=args.batch, epochs=args.epochs,
+                 block=args.block, phase_bits=args.phase_bits)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    if args.ci:
+        assert_gates(result)
+        n = sum(c["arm"] != "f32" for c in result["cells"])
+        print(f"[quantized] {n} quant cells OK (>=2x memory-or-speed, "
+              f"<= {NOTCH}x notch, f32 off-path bit-identical, "
+              "0 steady-state serving recompiles)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * serve_pde/*   — slot-batched PDE inference runtime: p50/p99 request
                     latency + points/sec at 1k/10k concurrent points,
                     engine vs naive per-request-jit (BENCH_serve_pde.json)
+  * quantized/*   — block-scaled int8/fp8 TT cores + 8-bit DAC phases vs
+                    f32: step time, weight memory, final residual per
+                    (pde, mode) cell (BENCH_quantized.json)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
                     fraction; run launch/dryrun.py first to populate)
 """
@@ -106,6 +109,15 @@ def bench_serve_pde(rows):
     rows += serve_pde.summarize(serve_pde.run())
 
 
+def bench_quantized(rows):
+    """Quantization sweep at a reduced budget (tt-only, one PDE each —
+    benchmarks/quantized.py standalone runs the full bits×mode×pde grid
+    with the training arms)."""
+    from benchmarks import quantized
+    rows += quantized.summarize(
+        quantized.run(modes=("tt",), epochs=20))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table1-epochs", type=int, default=300)
@@ -123,6 +135,9 @@ def main() -> None:
     ap.add_argument("--skip-serve-pde", action="store_true",
                     help="skip the slot-batched serving runtime benchmark "
                          "(~30s; the naive arm compiles per request)")
+    ap.add_argument("--skip-quantized", action="store_true",
+                    help="skip the int8/fp8 quantization sweep (~1 min at "
+                         "the reduced tt-only budget)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
@@ -137,6 +152,8 @@ def main() -> None:
         bench_distributed_zo(rows)
     if not args.skip_serve_pde:
         bench_serve_pde(rows)
+    if not args.skip_quantized:
+        bench_quantized(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)

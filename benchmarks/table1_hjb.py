@@ -24,10 +24,17 @@ from repro.core.photonic import NoiseModel
 def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
             epochs: int = 600, batch: int = 100, seed: int = 0,
             tt_rank: int = 2, tt_L: int = 3, lr: float = 2e-3,
-            sequential: bool = False, pde: str = "hjb-20d") -> dict:
+            sequential: bool = False, pde: str = "hjb-20d",
+            quant=None) -> dict:
     """One Table-1 cell on the workload ``pde``.  Returns
     {val_mse_mapped, val_mse_ideal, params, seconds, ...} (val MSEs are NaN
     for problems without a closed-form solution — track final_loss then).
+
+    ``quant`` (a ``kernels.quant.QuantConfig``) runs the cell
+    quantization-aware: fake-quant weights / DAC-snapped phases inside the
+    loss, the zoo protocol untouched (DESIGN.md §Quantization) — this is
+    how ``benchmarks/quantized.py`` threads its sweep through the one
+    Table-1 training loop.
 
     off-chip = BP training on the ideal model, then (if noise) map the
     trained weights onto noisy hardware and report the degraded loss.
@@ -42,7 +49,8 @@ def run_row(mode: str, on_chip: bool, noise: bool, hidden: int = 64,
         mode = {"tt": "tonn", "dense": "onn"}[mode]
     nm = NoiseModel(enabled=noise)
     cfg = pinn.PINNConfig(hidden=hidden, mode=mode, tt_rank=tt_rank,
-                          tt_L=tt_L, noise=nm, pde=pde)
+                          tt_L=tt_L, noise=nm, pde=pde,
+                          **({"quant": quant} if quant is not None else {}))
     model = pinn.TensorPinn(cfg)
     problem = model.problem
     key = jax.random.PRNGKey(seed)

@@ -519,10 +519,24 @@ class PhotonicMatrix:
         }
 
     # -- forward -------------------------------------------------------------
+    @staticmethod
+    def _dac_phases(pu: jax.Array, pv: jax.Array, quant) -> tuple:
+        """Snap the COMMANDED phases to the DAC grid (quant.phase_bits)
+        before the hardware noise model acts: the DAC drives the shifter,
+        then fabrication imperfections corrupt what it commanded —
+        Φ_eff = Ω(Γ ⊙ Q(Φ)) + Φ_b.  No-op (exact passthrough) when phase
+        quantization is off."""
+        if quant is None or not quant.phases:
+            return pu, pv
+        from repro.kernels import quant as quant_lib
+        return (quant_lib.quantize_phases(pu, quant.phase_bits),
+                quant_lib.quantize_phases(pv, quant.phase_bits))
+
     def apply(self, params: dict, x: jax.Array,
               noise_model: NoiseModel | None = None,
-              noise: dict | None = None) -> jax.Array:
-        pu, pv = params["phases_u"], params["phases_v"]
+              noise: dict | None = None, quant=None) -> jax.Array:
+        pu, pv = self._dac_phases(params["phases_u"], params["phases_v"],
+                                  quant)
         if noise_model is not None and noise is not None:
             pu = noise_model.effective_phases(pu, noise["u"])
             pv = noise_model.effective_phases(pv, noise["v"])
@@ -538,7 +552,7 @@ class PhotonicMatrix:
 
     def apply_stacked(self, params: dict, x: jax.Array,
                       noise_model: NoiseModel | None = None,
-                      noise: dict | None = None) -> jax.Array:
+                      noise: dict | None = None, quant=None) -> jax.Array:
         """``apply`` over a leading SPSA-perturbation axis S on the params
         (phases/sigma stacked; diag buffers ``(P,)`` shared or ``(S, P)``
         with identical rows): x ``(B, in)`` shared or ``(S, B, in)`` →
@@ -546,7 +560,8 @@ class PhotonicMatrix:
         physical chip.  Routed through the kernel dispatcher
         (``repro.kernels.ops.mesh_apply_stacked``)."""
         from repro.kernels import ops
-        pu, pv = params["phases_u"], params["phases_v"]
+        pu, pv = self._dac_phases(params["phases_u"], params["phases_v"],
+                                  quant)
         if noise_model is not None and noise is not None:
             pu = noise_model.effective_phases(pu, noise["u"])
             pv = noise_model.effective_phases(pv, noise["v"])
@@ -566,20 +581,22 @@ class PhotonicMatrix:
                 "v": model.sample(kv, self.layout_v.phase_shape())}
 
     def to_dense(self, params: dict, noise_model: NoiseModel | None = None,
-                 noise: dict | None = None) -> jax.Array:
+                 noise: dict | None = None, quant=None) -> jax.Array:
         eye = jnp.eye(self.in_dim, dtype=jnp.float32)
-        cols = self.apply(params, eye, noise_model, noise)  # row j = W e_j
+        cols = self.apply(params, eye, noise_model, noise,
+                          quant=quant)  # row j = W e_j
         return cols.T
 
     def to_dense_stacked(self, params: dict,
                          noise_model: NoiseModel | None = None,
-                         noise: dict | None = None) -> jax.Array:
+                         noise: dict | None = None, quant=None) -> jax.Array:
         """Densify S stacked parameter sets in ONE batched pass sharing the
         identity feed: → ``(S, out, in)`` with entry ``s`` f32-identical to
         ``to_dense`` of the per-index params.  This is the TONN hot-path
         primitive: all N+1 SPSA-perturbed core meshes densify together."""
         eye = jnp.eye(self.in_dim, dtype=jnp.float32)
-        cols = self.apply_stacked(params, eye, noise_model, noise)
+        cols = self.apply_stacked(params, eye, noise_model, noise,
+                                  quant=quant)
         return jnp.swapaxes(cols, -1, -2)
 
     @property

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro import pde as pde_lib
 from repro.core import fastmath, photonic, stein, tt
+from repro.kernels import quant as quant_lib
 
 __all__ = ["PINNConfig", "TensorPinn", "sample_collocation",
            "residual_loss", "residual_losses_stacked", "validation_mse",
@@ -72,6 +73,13 @@ class PINNConfig:
     #                             no problem instance is passed explicitly
     noise: photonic.NoiseModel = dataclasses.field(
         default_factory=lambda: photonic.NoiseModel(enabled=False))
+    quant: quant_lib.QuantConfig = dataclasses.field(
+        default_factory=lambda: quant_lib.QuantConfig(enabled=False))
+    # quantization-aware training/inference (DESIGN.md §Quantization):
+    # block-scaled int8/fp8 TT cores (quant.dtype) and finite-bit DAC
+    # phases (quant.phase_bits).  SPSA is gradient-free, so fake-quant in
+    # the loss is the whole QAT story — zoo/zo_shard see nothing new.
+    # Disabled (the default) is a bit-exact no-op on every path.
 
     @property
     def in_dim(self) -> int:
@@ -98,6 +106,10 @@ def config_from_meta(meta: dict) -> PINNConfig:
         nz_fields = {f.name for f in dataclasses.fields(photonic.NoiseModel)}
         kw["noise"] = photonic.NoiseModel(
             **{k: v for k, v in kw["noise"].items() if k in nz_fields})
+    if isinstance(kw.get("quant"), dict):
+        q_fields = {f.name for f in dataclasses.fields(quant_lib.QuantConfig)}
+        kw["quant"] = quant_lib.QuantConfig(
+            **{k: v for k, v in kw["quant"].items() if k in q_fields})
     return PINNConfig(**kw)
 
 
@@ -137,6 +149,10 @@ class TensorPinn:
         self.fd_step = (cfg.fd_step if cfg.fd_step is not None
                         else self.problem.fd_step)
         self._kron_split: int | None = None
+        # quantization hooks take None when disabled so every consumer
+        # early-returns to the exact unquantized code path (the f32
+        # off-path invariant, DESIGN.md §Quantization)
+        self._quant = cfg.quant if cfg.quant.enabled else None
         # stacked hot path: vectorized polynomial sine (XLA:CPU's jnp.sin is
         # a scalar libm call); ~2 ulp, within the FD noise floor (DESIGN.md
         # §Perf).  The sequential photonic-realism path keeps libm sin.
@@ -272,8 +288,10 @@ class TensorPinn:
         for k, pm in enumerate(self.photonic_cores[i]):
             nz = None if noise is None else noise[f"pcores{i}"][k]
             densify = pm.to_dense_stacked if stacked else pm.to_dense
+            # DAC phase quantization acts on the commanded mesh phases,
+            # before the noise model, inside the densification
             w = densify(params[f"pcores{i}"][k], cfg.noise if nz else None,
-                        nz)
+                        nz, quant=self._quant)
             shape = w.shape[:1] if stacked else ()
             cores.append(w.reshape(shape + spec.core_shapes[k]))
         return cores
@@ -294,6 +312,20 @@ class TensorPinn:
             eff[f"cores{i}"] = self._densify_cores(params, noise, i)
         return eff, None  # hardware noise is baked into the dense cores
 
+    def _fq_cores(self, cores: list, stacked: bool = False) -> list:
+        """Fake-quant TT cores for the unfused jnp chain (QAT semantics;
+        the fused ops paths quantize via their own ``quant=`` hook).  A
+        stacked list gets per-P block scales — matching the quantized
+        kernel's ``(P, n_blocks)`` scale layout.  Passthrough when weight
+        quantization is off."""
+        q = self._quant
+        if q is None or not q.weights:
+            return cores
+        if stacked:
+            return [jax.vmap(lambda c: quant_lib.fake_quant(c, q))(c)
+                    for c in cores]
+        return [quant_lib.fake_quant(c, q) for c in cores]
+
     def _layer_matvec(self, params: dict, noise: dict | None, i: int,
                       x: jax.Array) -> jax.Array:
         cfg = self.cfg
@@ -302,15 +334,16 @@ class TensorPinn:
         if cfg.mode == "onn":
             pm = self.photonic[i]
             nz = None if noise is None else noise[f"p{i}"]
-            return pm.apply(params[f"p{i}"], x, cfg.noise if nz else None, nz)
+            return pm.apply(params[f"p{i}"], x, cfg.noise if nz else None,
+                            nz, quant=self._quant)
         spec = self.specs[i]
         cores = params.get(f"cores{i}")
         if cores is None:  # unprepared tonn params: densify on the fly
             cores = self._densify_cores(params, noise, i)
         if cfg.use_fused_kernel:
             from repro.kernels import ops
-            return ops.tt_linear(x, cores, spec)
-        return tt.tt_matvec(cores, x, spec)
+            return ops.tt_linear(x, cores, spec, quant=self._quant)
+        return tt.tt_matvec(self._fq_cores(cores), x, spec)
 
     def f(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
         """Base network f(xt): (B, in_dim) → (B,)."""
@@ -397,13 +430,15 @@ class TensorPinn:
             pm = self.photonic[i]
             nz = None if noise is None else noise[f"p{i}"]
             return pm.apply_stacked(stacked[f"p{i}"], x,
-                                    cfg.noise if nz else None, nz)
+                                    cfg.noise if nz else None, nz,
+                                    quant=self._quant)
         spec = self.specs[i]
         cores = stacked[f"cores{i}"]
         if cfg.use_fused_kernel:
             from repro.kernels import ops
-            return ops.tt_linear_batched(x, cores, spec)
-        return tt.tt_matvec_stacked(cores, x, spec)
+            return ops.tt_linear_batched(x, cores, spec, quant=self._quant)
+        return tt.tt_matvec_stacked(self._fq_cores(cores, stacked=True),
+                                    x, spec)
 
     def _f_head_stacked(self, stacked: dict, a: jax.Array,
                         noise: dict | None = None) -> jax.Array:
@@ -436,7 +471,9 @@ class TensorPinn:
                              tuple(spec.ranks[:k + 1]))
             right = tt.TTSpec(spec.out_modes[k:], spec.in_modes[k:],
                               tuple(spec.ranks[k:]))
-            cores = stacked["cores1"]
+            # same fake-quant the chain path sees, so the Kronecker head
+            # stays bit-comparable with the stacked contraction under QAT
+            cores = self._fq_cores(list(stacked["cores1"]), stacked=True)
             wl = jax.vmap(lambda cs: tt.tt_to_full(cs, left))(
                 list(cores[:k]))                         # (P, ML, NL)
             wr = jax.vmap(lambda cs: tt.tt_to_full(cs, right))(

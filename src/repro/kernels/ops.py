@@ -22,11 +22,14 @@ from repro.core import photonic as _ph
 from repro.core import tt as tt_lib
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mesh_apply as _mesh
+from repro.kernels import quant as _quant
 from repro.kernels import ref as _ref
 from repro.kernels import tt_contract as _ttc
 
 __all__ = ["kernel_mode", "tt_linear", "tt_linear_batched",
-           "mesh_apply_stacked", "attention"]
+           "mesh_apply_stacked", "attention", "KERNEL_MODES"]
+
+KERNEL_MODES = ("pallas", "interpret", "ref")
 
 # above this many mesh levels the fully-unrolled kernel chain stops being
 # worth compiling (onn-sized meshes: levels == ports, e.g. hidden 1024) —
@@ -47,13 +50,30 @@ def _mesh_kernel_applicable(layout) -> bool:
 def kernel_mode() -> str:
     mode = os.environ.get("REPRO_KERNEL_MODE")
     if mode:
+        if mode not in KERNEL_MODES:
+            raise ValueError(
+                f"unknown REPRO_KERNEL_MODE {mode!r}; "
+                f"allowed values: {', '.join(KERNEL_MODES)}")
         return mode
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+def _weight_quant(quant) -> bool:
+    return quant is not None and quant.weights
+
+
 def tt_linear(x: jax.Array, cores: Sequence[jax.Array], spec: tt_lib.TTSpec,
-              mode: str | None = None) -> jax.Array:
+              mode: str | None = None, quant=None) -> jax.Array:
     mode = mode or kernel_mode()
+    if _weight_quant(quant):
+        if mode == "ref":
+            return _ref.tt_contract_quant_ref(x, cores, spec, quant)
+        # the single-chain hot path is serving-only and tiny; fake-quant
+        # the cores (same quantizer the batched kernel dequantizes from
+        # VMEM) and reuse the f32 kernel — math identical to the ref path
+        cores = [_quant.fake_quant(c, quant) for c in cores]
+        return _ttc.tt_contract(x, tuple(cores), spec,
+                                interpret=(mode == "interpret"))
     if mode == "ref":
         return _ref.tt_contract_ref(x, cores, spec)
     return _ttc.tt_contract(x, tuple(cores), spec,
@@ -62,12 +82,21 @@ def tt_linear(x: jax.Array, cores: Sequence[jax.Array], spec: tt_lib.TTSpec,
 
 def tt_linear_batched(x: jax.Array, cores: Sequence[jax.Array],
                       spec: tt_lib.TTSpec,
-                      mode: str | None = None) -> jax.Array:
+                      mode: str | None = None, quant=None) -> jax.Array:
     """P stacked TT-linears in one program — the ZO multi-perturbation path.
 
     cores: each ``(P, r, m, n, r')``; x ``(B, N)`` shared or ``(P, B, N)``.
+    With weight quantization on (``quant.weights``), ref mode fake-quants
+    in pure jnp (the CPU oracle) and pallas/interpret dispatch to the
+    narrow-dtype kernel that dequantizes block-scaled cores in VMEM —
+    both see bit-identical weights and accumulate f32.
     """
     mode = mode or kernel_mode()
+    if _weight_quant(quant):
+        if mode == "ref":
+            return _ref.tt_contract_batched_quant_ref(x, cores, spec, quant)
+        return _ttc.tt_contract_batched_quant(
+            x, tuple(cores), spec, quant, interpret=(mode == "interpret"))
     if mode == "ref":
         return _ref.tt_contract_batched_ref(x, cores, spec)
     return _ttc.tt_contract_batched(x, tuple(cores), spec,
@@ -76,7 +105,7 @@ def tt_linear_batched(x: jax.Array, cores: Sequence[jax.Array],
 
 def mesh_apply_stacked(layout, phases: jax.Array, diag: jax.Array,
                        x: jax.Array, transpose: bool = False,
-                       mode: str | None = None) -> jax.Array:
+                       mode: str | None = None, quant=None) -> jax.Array:
     """S stacked MZI-mesh applications in one program — the batched
     photonic engine of the phase-domain ZO path.
 
@@ -87,8 +116,17 @@ def mesh_apply_stacked(layout, phases: jax.Array, diag: jax.Array,
     and the jnp gather reference (``photonic.mesh_apply_stacked``); deep or
     wide meshes (levels > MESH_KERNEL_MAX_LEVELS, or a one-hot permutation
     table past MESH_KERNEL_MAX_ONEHOT_BYTES) always take the jnp path.
+
+    ``quant`` with ``phase_bits`` set snaps the commanded phases to the
+    uniform DAC grid before EITHER backend runs — the quantization is a
+    property of the hardware being simulated, not of the kernel, so all
+    modes see identical quantized phases.  (Callers going through
+    ``PhotonicMatrix`` quantize before the noise model instead and pass
+    quant=None here — idempotence makes the double hook safe anyway.)
     """
     mode = mode or kernel_mode()
+    if quant is not None and quant.phases:
+        phases = _quant.quantize_phases(phases, quant.phase_bits)
     if mode == "ref" or not _mesh_kernel_applicable(layout):
         return _ph.mesh_apply_stacked(layout, phases, diag, x, transpose)
     return _mesh.mesh_apply_stacked_pallas(layout, phases, diag, x,

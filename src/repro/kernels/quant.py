@@ -1,0 +1,173 @@
+"""Block-scaled quantization primitives for the TT/mesh hot paths.
+
+Two quantization domains, matching the target hardware (DESIGN.md
+§Quantization):
+
+  * **Weight (TT-core) quantization** — per-block absmax scaling of the
+    flattened core to int8 or fp8-e4m3: each contiguous block of
+    ``block`` elements shares one f32 scale (``absmax / qmax``), values
+    are stored in the narrow dtype, and every consumer dequantizes to
+    f32 *before* the contraction — accumulation is always f32
+    (``preferred_element_type`` in the kernel chain).  Storage cost at
+    block=32: 1 + 4/32 = 1.125 B/param vs 4 B f32 — a 3.56× cut.
+  * **Phase (DAC) quantization** — real MZI phase shifters are driven by
+    finite-bit DACs, so the trainable phase domain is snapped to the
+    uniform ``2π / 2**phase_bits`` grid.  This is applied to the
+    *commanded* phases BEFORE the hardware noise model acts
+    (Φ_eff = Ω(Γ ⊙ Q(Φ)) + Φ_b): the DAC drives the shifter, then
+    fabrication imperfections corrupt what it commanded.
+
+``fake_quant`` (quantize→dequantize in pure jnp) is the single source of
+truth: the Pallas kernels dequantize the exact ``quantize_blockwise``
+output in VMEM, so ``REPRO_KERNEL_MODE=ref`` with fake-quant weights is
+a bit-exact CPU oracle for the quantized kernel path.  Both schemes are
+idempotent (Q(Q(x)) == Q(x)), so accidental double application cannot
+drift.
+
+The f32-off-path invariant: every hook in ops/photonic/pinn/serving
+takes ``quant=None`` and early-returns to the exact pre-existing code
+path when quantization is disabled — with quant off nothing changes,
+bit for bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuantConfig", "QUANT_DTYPES", "quantize_blockwise",
+           "dequantize_blockwise", "fake_quant", "quantize_phases",
+           "quantized_bytes_per_param"]
+
+# narrow storage dtype → (jnp dtype, qmax used for the absmax scale)
+QUANT_DTYPES = {
+    "int8": (jnp.int8, 127.0),
+    "fp8_e4m3": (jnp.float8_e4m3fn, 448.0),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization knobs, threaded from ``PINNConfig`` down to the kernels.
+
+    ``enabled`` gates everything; with it False (the default) every code
+    path is bit-identical to a build without this module.  ``dtype``
+    selects the weight storage format (None = weights stay f32, e.g. a
+    phase-DAC-only study); ``block`` is the absmax-scaling granularity
+    over the flattened core; ``phase_bits`` is the DAC resolution for
+    trainable MZI phases (None = analog/f32 phases).
+    """
+
+    enabled: bool = False
+    dtype: str | None = "int8"      # "int8" | "fp8_e4m3" | None
+    block: int = 32
+    phase_bits: int | None = None
+
+    def __post_init__(self):
+        if self.dtype is not None and self.dtype not in QUANT_DTYPES:
+            raise ValueError(
+                f"unknown quant dtype {self.dtype!r}; "
+                f"allowed: {sorted(QUANT_DTYPES)} or None")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+        if self.phase_bits is not None and not 1 <= self.phase_bits <= 32:
+            raise ValueError(f"phase_bits must be in [1, 32], "
+                             f"got {self.phase_bits}")
+
+    # -------------------------------------------------------------- gates
+    @property
+    def weights(self) -> bool:
+        """True iff TT-core / weight quantization is active."""
+        return self.enabled and self.dtype is not None
+
+    @property
+    def phases(self) -> bool:
+        """True iff DAC phase quantization is active."""
+        return self.enabled and self.phase_bits is not None
+
+    def tag(self) -> str:
+        """Canonical short string for program/cache keys (empty when off,
+        so pre-quantization key formats are preserved exactly)."""
+        if not self.enabled:
+            return ""
+        parts = []
+        if self.dtype is not None:
+            parts.append(f"{self.dtype}b{self.block}")
+        if self.phase_bits is not None:
+            parts.append(f"pb{self.phase_bits}")
+        return "+".join(parts) if parts else "noop"
+
+
+def _check_weights(cfg: QuantConfig) -> tuple:
+    if not cfg.weights:
+        raise ValueError(f"weight quantization not enabled in {cfg}")
+    return QUANT_DTYPES[cfg.dtype]
+
+
+def quantize_blockwise(x: jax.Array, cfg: QuantConfig) -> tuple:
+    """Quantize ``x`` (any shape) with per-block absmax scaling over its
+    flattened elements.
+
+    Returns ``(q, scales)``: ``q`` flat ``(padded,)`` in the narrow dtype
+    (zero-padded to a ``cfg.block`` multiple), ``scales`` f32
+    ``(padded // block,)``.  Exact inverse shape/content recovery is
+    ``dequantize_blockwise(q, scales, x.shape, cfg)``.
+    """
+    qdtype, qmax = _check_weights(cfg)
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    padded = ((n + cfg.block - 1) // cfg.block) * cfg.block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    blocks = flat.reshape(-1, cfg.block)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scales = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    scaled = blocks / scales[:, None]
+    if cfg.dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(qdtype)
+    else:
+        q = scaled.astype(qdtype)
+    return q.reshape(-1), scales
+
+
+def dequantize_blockwise(q: jax.Array, scales: jax.Array, shape: tuple,
+                         cfg: QuantConfig) -> jax.Array:
+    """Inverse of ``quantize_blockwise``: f32 array of ``shape``."""
+    _check_weights(cfg)
+    n = int(np.prod(shape)) if shape else 1
+    deq = q.reshape(-1, cfg.block).astype(jnp.float32) * scales[:, None]
+    return deq.reshape(-1)[:n].reshape(shape)
+
+
+def fake_quant(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Quantize→dequantize round trip (QAT semantics; pure jnp).
+
+    This IS the reference for the quantized kernels: they dequantize the
+    same ``quantize_blockwise`` output in VMEM, so a fake-quant'd f32
+    chain and the quantized kernel see bit-identical weights.  No-op
+    passthrough when weight quantization is off.  Idempotent: the absmax
+    element of each block maps exactly back onto itself, so re-applying
+    changes nothing.
+    """
+    if not (cfg and cfg.weights):
+        return x
+    q, scales = quantize_blockwise(x, cfg)
+    return dequantize_blockwise(q, scales, x.shape, cfg).astype(x.dtype)
+
+
+def quantize_phases(phases: jax.Array, bits: int) -> jax.Array:
+    """Snap phases to the uniform ``2π / 2**bits`` DAC grid (round to
+    nearest code).  Idempotent; preserves dtype."""
+    step = 2.0 * np.pi / (1 << bits)
+    return (jnp.round(phases / step) * step).astype(phases.dtype)
+
+
+def quantized_bytes_per_param(cfg: QuantConfig) -> float:
+    """Storage cost (bytes/param) of the block-scaled format: 1 narrow
+    byte per value + one f32 scale per block."""
+    if not cfg.weights:
+        return 4.0
+    return 1.0 + 4.0 / cfg.block

@@ -14,8 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tt as tt_lib
+from repro.kernels import quant as quant_lib
 
-__all__ = ["tt_contract_ref", "tt_contract_batched_ref", "attention_ref"]
+__all__ = ["tt_contract_ref", "tt_contract_batched_ref",
+           "tt_contract_quant_ref", "tt_contract_batched_quant_ref",
+           "attention_ref"]
 
 
 def tt_contract_ref(x: jax.Array, cores: Sequence[jax.Array],
@@ -29,6 +32,29 @@ def tt_contract_batched_ref(x: jax.Array, cores: Sequence[jax.Array],
     """Oracle for the multi-perturbation kernel: vmap of the chain over the
     leading core-stack axis (x shared ``(B,N)`` or stacked ``(P,B,N)``)."""
     return tt_lib.tt_matvec_stacked(cores, x, spec)
+
+
+def tt_contract_quant_ref(x: jax.Array, cores: Sequence[jax.Array],
+                          spec: tt_lib.TTSpec,
+                          quant: quant_lib.QuantConfig) -> jax.Array:
+    """CPU oracle for the quantized TT chain: fake-quant each core in pure
+    jnp (exactly the ``quantize_blockwise`` the kernel dequantizes from
+    VMEM), then run the unquantized f32 chain — bit-exact vs the kernel's
+    dequantize-then-contract, accumulation f32 in both."""
+    fq = [quant_lib.fake_quant(c, quant) for c in cores]
+    return tt_lib.tt_matvec(fq, x, spec)
+
+
+def tt_contract_batched_quant_ref(x: jax.Array, cores: Sequence[jax.Array],
+                                  spec: tt_lib.TTSpec,
+                                  quant: quant_lib.QuantConfig) -> jax.Array:
+    """Quantized oracle for the multi-perturbation kernel: per-stack fake
+    quantization (each of the P core variants gets its own block scales —
+    matching the kernel's ``(P, n_blocks)`` scale layout), then the
+    stacked f32 chain."""
+    fq = [jax.vmap(lambda c: quant_lib.fake_quant(c, quant))(c)
+          for c in cores]
+    return tt_lib.tt_matvec_stacked(fq, x, spec)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

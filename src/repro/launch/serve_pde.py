@@ -73,7 +73,14 @@ def main(argv=None):
           f"{sum(len(r.points) for r in reqs)} points: "
           f"p50 {np.percentile(lat_ms, 50):.2f} ms, "
           f"p99 {np.percentile(lat_ms, 99):.2f} ms")
-    print(json.dumps(engine.serving_stats(), indent=2))
+    stats = engine.serving_stats()
+    cache = stats.get("cache", {})
+    print(f"[serve_pde] programs: {stats['compiles']} compiled, "
+          f"{stats['program_runs']} runs; stencil cache: "
+          f"{stats['cache_hits']} hits / {stats['cache_misses']} misses "
+          f"(hit rate {cache.get('hit_rate', 0.0):.1%}), "
+          f"{stats['cache_evictions']} evictions")
+    print(json.dumps(stats, indent=2))
 
 
 if __name__ == "__main__":

@@ -75,14 +75,23 @@ def train_pinn(args):
     from repro.data import pde_collocation_iterator
 
     build = pinn_reduced if args.reduced else pinn_config
+    overrides = {"hidden": args.hidden} if args.hidden else {}
+    if args.quant or args.phase_bits:
+        # quantization-aware ZO training: fake-quant inside the loss —
+        # zoo/zo_shard and the wire protocol are untouched (DESIGN.md
+        # §Quantization)
+        from repro.kernels import quant as quant_lib
+        overrides["quant"] = quant_lib.QuantConfig(
+            enabled=True, dtype=args.quant, block=args.quant_block,
+            phase_bits=args.phase_bits)
     cfg = build(pde=args.pde, mode=args.pinn_mode, fused=not args.sequential,
-                noise=args.pinn_noise,
-                **({"hidden": args.hidden} if args.hidden else {}))
+                noise=args.pinn_noise, **overrides)
     model = pinn.TensorPinn(cfg)
     problem = model.problem
     print(f"[pinn] pde={problem.name} in_dim={problem.in_dim} "
           f"mode={cfg.mode} hidden={cfg.hidden} deriv={cfg.deriv} "
-          f"fused={cfg.use_fused_kernel}")
+          f"fused={cfg.use_fused_kernel}"
+          + (f" quant={cfg.quant.tag()}" if cfg.quant.enabled else ""))
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
@@ -269,6 +278,15 @@ def main(argv=None):
                          "scalar traffic per step)")
     ap.add_argument("--pinn-noise", action="store_true",
                     help="enable the fabrication-noise model (on-chip rows)")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "int8", "fp8_e4m3"],
+                    help="quantization-aware training: block-scaled TT-core/"
+                         "weight quantization (DESIGN.md §Quantization)")
+    ap.add_argument("--quant-block", type=int, default=32,
+                    help="absmax-scaling block size for --quant")
+    ap.add_argument("--phase-bits", type=int, default=None,
+                    help="DAC resolution: snap trainable MZI phases to the "
+                         "uniform 2π/2^bits grid (hardware-faithful knob)")
     args = ap.parse_args(argv)
 
     if args.arch in PINN_ARCHS:

@@ -51,16 +51,23 @@ class StencilCache:
         self.evictions = 0
 
     # ------------------------------------------------------------------ keys
-    def keys_for(self, solver: str, dtype, points: np.ndarray) -> list:
+    def keys_for(self, solver: str, dtype, points: np.ndarray,
+                 quant_tag: str = "") -> list:
         """Quantized cache keys for a (n, in_dim) point batch.
 
         Quantization runs in f64 so the key grid is stable regardless of
         the query's storage dtype; the dtype tag keeps e.g. bf16-served
-        values from answering f32 queries.
+        values from answering f32 queries.  ``quant_tag`` (the canonical
+        ``QuantConfig.tag()``, empty for f32 serving) isolates
+        quantized-program results the same way — an int8-served value
+        must never answer an f32 query or vice versa.  Empty-tag keys are
+        byte-identical to the pre-quantization format.
         """
         pts = np.asarray(points, np.float64)
         cells = np.round(pts / self.quantum).astype(np.int64)
         prefix = f"{solver}|{np.dtype(dtype).name}|".encode()
+        if quant_tag:
+            prefix += f"{quant_tag}|".encode()
         return [prefix + row.tobytes() for row in cells]
 
     # ---------------------------------------------------------------- lookup

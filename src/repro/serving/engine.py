@@ -49,6 +49,13 @@ from repro.serving.registry import SolverRegistry
 __all__ = ["PointRequest", "PdeServingEngine"]
 
 
+def _quant_tag(quant) -> str:
+    """Canonical quant-config tag for program/cache keys; empty when
+    quantization is off, so pre-quantization key formats (and the tests
+    pinning them) are preserved exactly."""
+    return "" if quant is None else quant.tag()
+
+
 @dataclasses.dataclass
 class PointRequest:
     """One client query: evaluate ``u`` of ``solver`` at ``points``.
@@ -56,11 +63,16 @@ class PointRequest:
     ``out`` is filled in place (same order as ``points``); ``done`` flips
     when every point is served.  ``latency_s`` covers submit → completion,
     including queue wait — the number the benchmark's p50/p99 reports.
+    ``quant`` (a ``kernels.quant.QuantConfig``) requests quantized
+    inference: it extends the program key — one extra AOT program per
+    (solver, dtype, quant, slot-shape), compiled once like any other —
+    and isolates the request's cache entries under the quant tag.
     """
 
     solver: str
     points: np.ndarray                    # (n, in_dim)
     dtype: Any = np.float32
+    quant: Any = None                     # QuantConfig | None (None = f32)
     out: np.ndarray | None = None         # (n,) served u-values
     done: bool = False
     t_submit: float = 0.0
@@ -102,23 +114,39 @@ class PdeServingEngine:
         # deque admission (the LM engine's list.pop(0) was O(n) per admit)
         self.queue: collections.deque[PointRequest] = collections.deque()
         self.active: list[_Slot | None] = [None] * slots
-        self._programs: dict = {}      # (solver, dtype, S, C) -> executable
+        self._programs: dict = {}      # (solver, dtype[, quant], S, C) -> exe
         self._fill: dict = {}          # solver -> in-domain fill point
         self.stats = {"compiles": 0, "steps": 0, "program_runs": 0,
                       "points_served": 0, "points_padded": 0,
-                      "requests_done": 0, "peak_active_slots": 0}
+                      "requests_done": 0, "peak_active_slots": 0,
+                      "cache_hits": 0, "cache_misses": 0,
+                      "cache_evictions": 0}
+
+    def _sync_cache_stats(self) -> None:
+        """Mirror the ``StencilCache`` counters into ``stats`` so one dict
+        answers 'how is serving going' (the launcher and tests read it)."""
+        if self.cache is not None:
+            self.stats["cache_hits"] = self.cache.hits
+            self.stats["cache_misses"] = self.cache.misses
+            self.stats["cache_evictions"] = self.cache.evictions
 
     # ------------------------------------------------------------ programs
     def _pool_shape(self, in_dim: int) -> tuple:
         return (self.slots * self.slot_points, in_dim)
 
-    def _program(self, solver_name: str, dtype):
-        """The compiled full-pool forward for (solver, dtype) — built (and
-        counted) once, then a pure executable: calling it can never
-        recompile, and a shape drift would be a hard error rather than a
-        silent recompile (AOT executables reject mismatched shapes)."""
-        key = (solver_name, np.dtype(dtype).name, self.slots,
-               self.slot_points)
+    def _program(self, solver_name: str, dtype, quant=None):
+        """The compiled full-pool forward for (solver, dtype[, quant]) —
+        built (and counted) once, then a pure executable: calling it can
+        never recompile, and a shape drift would be a hard error rather
+        than a silent recompile (AOT executables reject mismatched
+        shapes).  A quantized program serves through a model whose quant
+        hooks are enabled; the frozen params are jit constants, so the
+        fake-quant folds at AOT-compile time — steady-state cost is one
+        program run, identical to f32 serving, with ZERO extra
+        recompiles."""
+        tag = _quant_tag(quant)
+        key = (solver_name, np.dtype(dtype).name,
+               *((tag,) if tag else ()), self.slots, self.slot_points)
         exe = self._programs.get(key)
         if exe is None:
             solver = self.registry.get(solver_name)
@@ -133,6 +161,16 @@ class PdeServingEngine:
                 noise = (jax.tree.map(cast, noise)
                          if noise is not None else None)
             model = solver.model
+            if tag:
+                # request-level quantization: rebind the solver's model
+                # with the quant hooks on (same problem, same params).
+                # NOTE: a prepared tonn solver is already densified, so
+                # phase_bits only bites solvers quantized at train/load
+                # time; core/weight quantization applies here regardless.
+                from repro.core import pinn as pinn_lib
+                model = pinn_lib.TensorPinn(
+                    dataclasses.replace(model.cfg, quant=quant),
+                    problem=model.problem)
             fwd = jax.jit(lambda pts: model.u(params, pts, noise))
             spec = jax.ShapeDtypeStruct(self._pool_shape(solver.in_dim),
                                         np.dtype(dtype))
@@ -142,15 +180,15 @@ class PdeServingEngine:
         return exe
 
     def warmup(self, solver_name: str | None = None,
-               dtype=np.float32) -> None:
-        """Build AND execute the (solver, dtype, slot-shape) program(s) on
-        a pure-fill pool, so the first real request pays neither the XLA
-        compile nor the first-dispatch setup.  ``None`` warms every
-        registered solver."""
+               dtype=np.float32, quant=None) -> None:
+        """Build AND execute the (solver, dtype[, quant], slot-shape)
+        program(s) on a pure-fill pool, so the first real request pays
+        neither the XLA compile nor the first-dispatch setup.  ``None``
+        warms every registered solver."""
         names = (self.registry.names() if solver_name is None
                  else (solver_name,))
         for name in names:
-            exe = self._program(name, dtype)
+            exe = self._program(name, dtype, quant)
             in_dim = self.registry.get(name).in_dim
             buf = np.broadcast_to(
                 self._fill_point(name),
@@ -186,12 +224,14 @@ class PdeServingEngine:
         req.t_submit = time.perf_counter()
         req.out = np.empty(pts.shape[0], np.float64)
         if self.cache is not None:
-            keys = self.cache.keys_for(req.solver, req.dtype, pts)
+            keys = self.cache.keys_for(req.solver, req.dtype, pts,
+                                       quant_tag=_quant_tag(req.quant))
             hit_idx, hit_vals, miss_idx = self.cache.lookup(keys)
             if len(hit_idx):
                 req.out[hit_idx] = hit_vals
             req._miss_idx = miss_idx
             req._keys = keys
+            self._sync_cache_stats()
         else:
             req._miss_idx = np.arange(pts.shape[0])
             req._keys = None
@@ -228,7 +268,8 @@ class PdeServingEngine:
         for s, slot in enumerate(self.active):
             if slot is not None:
                 groups.setdefault(
-                    (slot.req.solver, np.dtype(slot.req.dtype).name),
+                    (slot.req.solver, np.dtype(slot.req.dtype).name,
+                     _quant_tag(slot.req.quant)),
                     []).append(s)
         if not groups:
             return 0
@@ -237,9 +278,10 @@ class PdeServingEngine:
             self.stats["peak_active_slots"],
             sum(len(v) for v in groups.values()))
         served = 0
-        for (solver_name, dtype_name), slot_ids in groups.items():
+        for (solver_name, dtype_name, _tag), slot_ids in groups.items():
             dtype = np.dtype(dtype_name)
-            exe = self._program(solver_name, dtype)
+            quant = self.active[slot_ids[0]].req.quant
+            exe = self._program(solver_name, dtype, quant)
             in_dim = self.registry.get(solver_name).in_dim
             # full-pool input: fill point everywhere, then overwrite the
             # group's slots with their chunks (pad-to-slot)
@@ -277,6 +319,7 @@ class PdeServingEngine:
             self.stats["points_padded"] += \
                 (self.slots - len(slot_ids)) * self.slot_points
         self.stats["points_served"] += served
+        self._sync_cache_stats()
         return served
 
     def run(self, max_steps: int | None = None) -> int:
@@ -292,6 +335,7 @@ class PdeServingEngine:
 
     # ----------------------------------------------------------- reporting
     def serving_stats(self) -> dict:
+        self._sync_cache_stats()
         out = dict(self.stats)
         out["queued"] = len(self.queue)
         out["programs"] = sorted(

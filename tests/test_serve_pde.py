@@ -304,6 +304,130 @@ def test_trainer_writes_solver_metadata(tmp_path):
     assert s.step == 2
 
 
+# ------------------------------------------- non-f32 / quantized serving
+
+def _direct_cast(reg, name, pts, dtype):
+    """The engine's own lower-precision contract: frozen params cast ONCE
+    to ``dtype`` (exactly ``_program``'s build-time cast), then the
+    ordinary forward on ``dtype`` points."""
+    s = reg.get(name)
+    cast = lambda x: (x.astype(dtype)
+                      if jnp.issubdtype(x.dtype, jnp.floating) else x)
+    params = jax.tree.map(cast, s.params)
+    noise = jax.tree.map(cast, s.noise) if s.noise is not None else None
+    return np.asarray(jax.jit(
+        lambda p: s.model.u(params, p, noise))(
+            jnp.asarray(pts).astype(dtype)))
+
+
+@pytest.mark.parametrize("mode", ["tt", "tonn"])
+def test_bf16_serving_parity(mode):
+    """The non-f32 program path (build-time param cast): served bf16 output
+    is bit-identical to the equivalent direct bf16 forward (pad-invariance
+    holds in any dtype), and within the bf16 accuracy floor of the f32
+    values — 8-bit mantissa ⇒ ~4e-3 relative per rounding, amplified
+    through the 3-layer sine chain; 5e-2 relative is the same floor
+    tests/test_kernels.py documents for bf16 kernel parity."""
+    reg = _registry([("s", "heat-10d", mode)])
+    eng = PdeServingEngine(reg, slots=2, slot_points=32, enable_cache=False)
+    pts = _query(reg, "s", 40, seed=9)
+    req = eng.submit(PointRequest("s", pts, dtype=jnp.bfloat16))
+    eng.run()
+    assert req.done
+    direct = _direct_cast(reg, "s", pts, jnp.bfloat16)
+    np.testing.assert_array_equal(
+        req.out.astype(jnp.bfloat16), direct)          # bit-identity
+    f32 = _direct(reg, "s", pts)
+    scale = np.maximum(np.abs(f32), 1.0)
+    assert np.max(np.abs(req.out - f32) / scale) < 5e-2   # documented floor
+    assert "s|bfloat16|2|32" in eng.serving_stats()["programs"]
+
+
+def _quant_model_direct(reg, name, pts, qcfg):
+    """Direct forward through the solver's model with the quant hooks on —
+    exactly what ``_program`` builds for a quantized request."""
+    import dataclasses
+    s = reg.get(name)
+    qmodel = pinn.TensorPinn(dataclasses.replace(s.model.cfg, quant=qcfg),
+                             problem=s.model.problem)
+    return np.asarray(jax.jit(
+        lambda p: qmodel.u(s.params, p, s.noise))(jnp.asarray(pts)))
+
+
+@pytest.mark.parametrize("qdtype", ["int8", "fp8_e4m3"])
+def test_quantized_serving_parity_and_program_isolation(qdtype):
+    """Quantized programs: one extra compile per quant config, outputs
+    bit-identical to the fake-quant direct forward, within one accuracy
+    notch of f32 (block-scaled 8-bit weights: ≤5e-2 relative on u — the
+    notch DESIGN.md §Quantization documents), and the f32 program's
+    outputs are untouched by quantized traffic."""
+    from repro.kernels.quant import QuantConfig
+    qcfg = QuantConfig(enabled=True, dtype=qdtype, block=32)
+    reg = _registry([("s", "heat-10d", "tt")])
+    eng = PdeServingEngine(reg, slots=2, slot_points=32, enable_cache=False)
+    pts = _query(reg, "s", 40, seed=13)
+    r_f32 = eng.submit(PointRequest("s", pts))
+    r_q = eng.submit(PointRequest("s", pts, quant=qcfg))
+    eng.run()
+    assert r_f32.done and r_q.done
+    # f32 arm: still bit-identical to the plain direct forward
+    np.testing.assert_array_equal(r_f32.out.astype(np.float32),
+                                  _direct(reg, "s", pts))
+    # quant arm: bit-identical to the fake-quant forward, close to f32
+    np.testing.assert_array_equal(r_q.out.astype(np.float32),
+                                  _quant_model_direct(reg, "s", pts, qcfg))
+    scale = np.maximum(np.abs(r_f32.out), 1.0)
+    assert np.max(np.abs(r_q.out - r_f32.out) / scale) < 5e-2
+    assert (r_q.out != r_f32.out).any()      # quantization actually bites
+    # exactly two programs, tagged apart; resubmits never recompile
+    assert eng.stats["compiles"] == 2
+    progs = set(eng.serving_stats()["programs"])
+    assert progs == {"s|float32|2|32", f"s|float32|{qcfg.tag()}|2|32"}
+    for _ in range(3):
+        eng.submit(PointRequest("s", _query(reg, "s", 17, seed=21),
+                                quant=qcfg))
+        eng.run()
+    assert eng.stats["compiles"] == 2        # zero steady-state recompiles
+
+
+def test_cache_isolates_quantized_results():
+    """An int8-served value must never answer an f32 query (and vice
+    versa): the quant tag is part of the cache key."""
+    from repro.kernels.quant import QuantConfig
+    qcfg = QuantConfig(enabled=True, dtype="int8", block=32)
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=32)
+    pts = _query(reg, "heat", 12, seed=2)
+    eng.submit(PointRequest("heat", pts))
+    eng.run()
+    hits_before = eng.cache.stats()["hits"]
+    rq = eng.submit(PointRequest("heat", pts, quant=qcfg))   # same points
+    eng.run()
+    assert rq.done
+    assert eng.cache.stats()["hits"] == hits_before          # no cross-hits
+    # the quantized resubmit DOES hit its own entries
+    rq2 = eng.submit(PointRequest("heat", pts, quant=qcfg))
+    assert rq2.done and eng.cache.stats()["hits"] == hits_before + 12
+    np.testing.assert_array_equal(rq.out, rq2.out)
+
+
+def test_cache_counters_surface_in_engine_stats():
+    """StencilCache hit/miss/eviction counters are mirrored into
+    ``engine.stats`` (the launcher's summary line reads them there)."""
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=32)
+    assert eng.stats["cache_hits"] == 0 and eng.stats["cache_misses"] == 0
+    pts = _query(reg, "heat", 15, seed=4)
+    eng.submit(PointRequest("heat", pts))
+    eng.run()
+    eng.submit(PointRequest("heat", pts))    # full cache hit at submit
+    assert eng.stats["cache_hits"] == 15
+    assert eng.stats["cache_misses"] == 15
+    st = eng.serving_stats()
+    assert st["cache_hits"] == st["cache"]["hits"] == 15
+    assert st["cache_evictions"] == eng.cache.evictions == 0
+
+
 def test_lm_engine_queue_is_deque():
     """The O(n) list.pop(0) admission regression guard for BOTH engines."""
     from collections import deque
