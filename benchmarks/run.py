@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * quantized/*   — block-scaled int8/fp8 TT cores + 8-bit DAC phases vs
                     f32: step time, weight memory, final residual per
                     (pde, mode) cell (BENCH_quantized.json)
+  * coeff_family/* — one coefficient-conditioned checkpoint vs dedicated
+                    per-coefficient checkpoints: closed-form val MSE per
+                    held-out coefficient (BENCH_coeff_family.json)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
                     fraction; run launch/dryrun.py first to populate)
 """
@@ -118,6 +121,15 @@ def bench_quantized(rows):
         quantized.run(modes=("tt",), epochs=20))
 
 
+def bench_coeff_family(rows):
+    """Conditioned-family comparison at a reduced budget (hjb only —
+    benchmarks/coeff_family.py standalone runs all three families with
+    the off-path and serving gate checks)."""
+    from benchmarks import coeff_family
+    rows += coeff_family.summarize(
+        coeff_family.run(families=("hjb",)))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table1-epochs", type=int, default=300)
@@ -138,6 +150,9 @@ def main() -> None:
     ap.add_argument("--skip-quantized", action="store_true",
                     help="skip the int8/fp8 quantization sweep (~1 min at "
                          "the reduced tt-only budget)")
+    ap.add_argument("--skip-coeff-family", action="store_true",
+                    help="skip the conditioned-family comparison (~1 min "
+                         "at the reduced hjb-only budget)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
@@ -154,6 +169,8 @@ def main() -> None:
         bench_serve_pde(rows)
     if not args.skip_quantized:
         bench_quantized(rows)
+    if not args.skip_coeff_family:
+        bench_coeff_family(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)

@@ -138,9 +138,15 @@ class TensorPinn:
         self.cfg = cfg
         self.problem = problem if problem is not None \
             else pde_lib.get_problem(cfg.pde)
-        # the problem owns the input geometry (cfg.space_dim is legacy)
+        # the problem owns the input geometry (cfg.space_dim is legacy):
+        # ``in_dim`` is the physical (x[, t]) width — the only coordinates
+        # FD stencils ever shift — while ``net_in`` adds the problem's
+        # coefficient slots (DESIGN.md §Parameterized families).  The two
+        # coincide for unconditioned problems, keeping every legacy path
+        # bit-identical.
         self.space_dim = self.problem.space_dim
         self.in_dim = self.problem.in_dim
+        self.net_in = self.problem.net_dim
         # effective FD step: an explicit config value wins; the None
         # sentinel defers to the problem's recommended step (the one its
         # residual_tol noise floor is documented at — DESIGN.md §PDE).
@@ -160,10 +166,11 @@ class TensorPinn:
         h = cfg.hidden
         if cfg.mode in ("tt", "tonn"):
             # pad the input up to a TT-factorizable width (the paper folds
-            # 21 → 1024 so layer 1 is a 1024×1024 TT matrix)
-            self.in_pad = h if h >= self.in_dim else -(-self.in_dim // 8) * 8
+            # 21 → 1024 so layer 1 is a 1024×1024 TT matrix); coefficient
+            # slots count toward the unpadded width
+            self.in_pad = h if h >= self.net_in else -(-self.net_in // 8) * 8
         else:
-            self.in_pad = self.in_dim
+            self.in_pad = self.net_in
         # layer dims after padding the input up to the TT-factorizable size
         self.dims = [(h, self.in_pad), (h, h), (1, h)]
         if cfg.mode in ("tt", "tonn"):
@@ -345,13 +352,31 @@ class TensorPinn:
             return ops.tt_linear(x, cores, spec, quant=self._quant)
         return tt.tt_matvec(self._fq_cores(cores), x, spec)
 
-    def f(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
-        """Base network f(xt): (B, in_dim) → (B,)."""
-        params, noise = self.prepare_params(params, noise)
+    def _embed(self, xt: jax.Array) -> jax.Array:
+        """Raw rows (..., net_in) → network inputs (..., in_pad).
+
+        Coefficient slots are normalized to [0,1] via the problem's
+        ``CoeffSpec`` (so the net sees O(1) inputs whatever the raw
+        coefficient units), the physical coordinates pass through
+        untouched, and the row is zero-padded to the TT-factorizable
+        width.  Unconditioned problems reduce this to exactly the legacy
+        pad (bit-identical off-path)."""
         h = xt
-        if self.in_pad > self.in_dim:
-            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.in_dim,), h.dtype)
+        spec = self.problem.coeff_spec
+        if spec is not None:
+            h = jnp.concatenate(
+                [h[..., :self.in_dim],
+                 spec.normalize(h[..., self.in_dim:self.net_in])], axis=-1)
+        if self.in_pad > self.net_in:
+            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.net_in,),
+                            h.dtype)
             h = jnp.concatenate([h, pad], axis=-1)
+        return h
+
+    def f(self, params: dict, xt: jax.Array, noise: dict | None = None) -> jax.Array:
+        """Base network f(xt): (B, net_in) → (B,)."""
+        params, noise = self.prepare_params(params, noise)
+        h = self._embed(xt)
         for i in range(2):
             h = self._layer_matvec(params, noise, i, h) + params[f"b{i}"]
             h = jnp.sin(h)
@@ -375,29 +400,31 @@ class TensorPinn:
 
     def fd_u_stencil(self, params: dict, xt: jax.Array, h: float,
                      noise: dict | None = None) -> jax.Array:
-        """u at [x, x+h·e_1, ..., x−h·e_Din]: (2·in_dim+1, B) values with
+        """u at [x, x+h·e_1, ..., x−h·e_A]: (2·in_dim+1, B) values with
         layer 1 computed ONCE (incremental rank-1 FD forward); the problem
-        ansatz is applied pointwise at the perturbed coordinates."""
+        ansatz is applied pointwise at the perturbed coordinates.  Only the
+        A = in_dim physical coordinates are shifted — coefficient slots are
+        inputs the PDE never differentiates, and since the embedding is
+        affine per slot the rank-1 column updates are untouched by
+        conditioning."""
         cfg = self.cfg
         params, noise = self.prepare_params(params, noise)
-        B, Din = xt.shape
-        xp = xt
-        if self.in_pad > Din:
-            xp = jnp.concatenate(
-                [xt, jnp.zeros((B, self.in_pad - Din), xt.dtype)], axis=-1)
+        B = xt.shape[0]
+        A = self.in_dim
+        xp = self._embed(xt)
         z0 = self._layer_matvec(params, noise, 0, xp) + params["b0"]  # (B,H)
-        cols = self._layer1_columns(params, noise)                    # (Din,H)
+        cols = self._layer1_columns(params, noise)                    # (A,H)
         hcols = h * cols
         z = jnp.concatenate([z0[None],
                              z0[None] + hcols[:, None],               # +h e_i
-                             z0[None] - hcols[:, None]], axis=0)      # (2D+1,B,H)
+                             z0[None] - hcols[:, None]], axis=0)      # (2A+1,B,H)
         a = jnp.sin(z)
         a = jnp.sin(self._layer_matvec(params, noise, 1,
                                        a.reshape(-1, cfg.hidden))
                     + params["b1"])
         f = (a @ params["w2"].T + params["b2"])[..., 0]
-        f = f.reshape(2 * Din + 1, B)
-        return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h))
+        f = f.reshape(2 * A + 1, B)
+        return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h, A))
 
     # --------------------------------------- stacked (multi-perturbation) ZO
     def prepare_params_stacked(self, stacked: dict, noise: dict | None) -> dict:
@@ -511,41 +538,71 @@ class TensorPinn:
         the batched mesh engine (``PhotonicMatrix.apply_stacked``) with the
         shared hardware ``noise``."""
         cfg = self.cfg
-        B, Din = xt.shape
+        B = xt.shape[0]
+        A = self.in_dim
         P = stacked["b0"].shape[0]
-        xp = xt
-        if self.in_pad > Din:
-            xp = jnp.concatenate(
-                [xt, jnp.zeros((B, self.in_pad - Din), xt.dtype)], axis=-1)
+        xp = self._embed(xt)
         z0 = self._layer_matvec_stacked(stacked, 0, xp, noise) \
             + stacked["b0"][:, None]                                  # (P,B,H)
         eye = jnp.eye(self.in_dim, self.in_pad, dtype=jnp.float32)
-        cols = self._layer_matvec_stacked(stacked, 0, eye, noise)     # (P,Din,H)
+        cols = self._layer_matvec_stacked(stacked, 0, eye, noise)     # (P,A,H)
         hcols = h * cols
         z = jnp.concatenate(
             [z0[:, None],
              z0[:, None] + hcols[:, :, None],                         # +h e_i
-             z0[:, None] - hcols[:, :, None]], axis=1)        # (P,2Din+1,B,H)
-        a = self._sin(z).reshape(P, (2 * Din + 1) * B, cfg.hidden)
-        f = self._f_head_stacked(stacked, a, noise).reshape(P, 2 * Din + 1, B)
-        return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h))
+             z0[:, None] - hcols[:, :, None]], axis=1)         # (P,2A+1,B,H)
+        a = self._sin(z).reshape(P, (2 * A + 1) * B, cfg.hidden)
+        f = self._f_head_stacked(stacked, a, noise).reshape(P, 2 * A + 1, B)
+        return self.problem.ansatz(f, pde_lib.fd_stencil_points(xt, h, A))
 
     def f_stacked(self, stacked: dict, xt: jax.Array,
                   noise: dict | None = None) -> jax.Array:
         """Base network for P stacked (prepared) parameter sets over a
-        SHARED input batch: (B, in_dim) → (P, B)."""
-        h = xt
-        if self.in_pad > self.in_dim:
-            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.in_dim,), h.dtype)
-            h = jnp.concatenate([h, pad], axis=-1)
+        SHARED input batch: (B, net_in) → (P, B)."""
+        h = self._embed(xt)
         a = self._sin(self._layer_matvec_stacked(stacked, 0, h, noise)
                       + stacked["b0"][:, None])
         return self._f_head_stacked(stacked, a, noise)
 
     def u_stacked(self, stacked: dict, xt: jax.Array,
                   noise: dict | None = None) -> jax.Array:
-        """Ansatz u for P stacked parameter sets: (B, in_dim) → (P, B)."""
+        """Ansatz u for P stacked parameter sets: (B, net_in) → (P, B)."""
         return self.problem.ansatz(self.f_stacked(stacked, xt, noise), xt)
+
+    # ------------------------------------------- coefficient-family queries
+    def _coeff_rows(self, pts: jax.Array, coeffs: jax.Array) -> jax.Array:
+        """(B, in_dim) physical points × (C, K) raw coefficient vectors →
+        (C·B, net_in) augmented rows (C-major)."""
+        if self.problem.coeff_spec is None:
+            raise ValueError(
+                f"PDE {self.problem.name!r} is not coefficient-conditioned")
+        coeffs = jnp.asarray(coeffs, dtype=pts.dtype)
+        C, K = coeffs.shape
+        B = pts.shape[0]
+        rows = jnp.concatenate(
+            [jnp.broadcast_to(pts[None], (C, B, self.in_dim)),
+             jnp.broadcast_to(coeffs[:, None, :], (C, B, K))], axis=-1)
+        return rows.reshape(C * B, self.net_in)
+
+    def u_coeff_grid(self, params: dict, pts: jax.Array, coeffs: jax.Array,
+                     noise: dict | None = None) -> jax.Array:
+        """u over the coefficient × point grid: (C, B) — the same physical
+        batch evaluated under C scenarios through one flattened forward
+        (every mode/kernel path works unchanged; the second batch axis is
+        just more rows)."""
+        C, B = coeffs.shape[0], pts.shape[0]
+        return self.u(params, self._coeff_rows(pts, coeffs),
+                      noise).reshape(C, B)
+
+    def u_coeff_grid_stacked(self, stacked: dict, pts: jax.Array,
+                             coeffs: jax.Array,
+                             noise: dict | None = None) -> jax.Array:
+        """``u_coeff_grid`` for P stacked parameter sets: (P, C, B) — the
+        perturbations × coefficients double batch of the conditioned ZO
+        path, flattened through the stacked evaluator."""
+        C, B = coeffs.shape[0], pts.shape[0]
+        vals = self.u_stacked(stacked, self._coeff_rows(pts, coeffs), noise)
+        return vals.reshape(vals.shape[0], C, B)
 
 
 class HJBPinn(TensorPinn):
@@ -597,11 +654,13 @@ def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
     else:
         f = lambda pts: model.u(params, pts, noise)
         if cfg.deriv == "fd":
-            est = stein.fd_estimate(f, xt, h=model.fd_step)
+            est = stein.fd_estimate(f, xt, h=model.fd_step,
+                                    n_active=model.in_dim)
         else:
             assert key is not None, "stein estimator needs a PRNG key"
             est = stein.stein_estimate(f, xt, key, sigma=cfg.stein_sigma,
-                                       num_samples=cfg.stein_samples)
+                                       num_samples=cfg.stein_samples,
+                                       n_active=model.in_dim)
         r = problem.residual(est, xt)
         loss = jnp.mean(r * r)
     if bc is not None:
@@ -651,9 +710,10 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
         vals = model.fd_u_stencil_stacked(prepared, xt, h, eff_noise)
     else:
         B, D = xt.shape
-        pts = pde_lib.fd_stencil_points(xt, h)
+        A = model.in_dim  # coefficient slots are never differentiated
+        pts = pde_lib.fd_stencil_points(xt, h, A)
         vals = model.u_stacked(prepared, pts.reshape(-1, D), eff_noise)
-        vals = vals.reshape(vals.shape[0], 2 * D + 1, B)
+        vals = vals.reshape(vals.shape[0], 2 * A + 1, B)
     losses = jax.vmap(
         lambda v: _loss_from_u_stencil(problem, v, h, xt))(vals)
     if bc is not None:

@@ -54,40 +54,54 @@ def num_fd_inferences(d: int) -> int:
 
 
 def fd_estimate(f: Callable[[jax.Array], jax.Array], x: jax.Array,
-                h: float = 1e-2) -> DerivativeEstimate:
+                h: float = 1e-2,
+                n_active: int | None = None) -> DerivativeEstimate:
     """Central finite differences via one stacked forward.
 
-    x: (B, D).  Builds the (2D+1, B, D) perturbed batch
-    [x, x+h e_1, x−h e_1, ..., x+h e_D, x−h e_D], evaluates f once, and
-    assembles first/second derivatives.
+    x: (B, D).  Builds the (2A+1, B, D) perturbed batch
+    [x, x+h e_1, x−h e_1, ..., x+h e_A, x−h e_A], evaluates f once, and
+    assembles first/second derivatives.  ``n_active`` restricts the
+    differentiated coordinates to the first A columns (A = D when None):
+    coefficient-conditioned rows carry trailing coefficient slots the PDE
+    never differentiates, so the returned leaves are (B, A).
     """
     B, D = x.shape
-    eye = jnp.eye(D, dtype=x.dtype) * jnp.asarray(h, dtype=x.dtype)
-    plus = x[None, :, :] + eye[:, None, :]    # (D, B, D)
-    minus = x[None, :, :] - eye[:, None, :]   # (D, B, D)
-    stacked = jnp.concatenate([x[None], plus, minus], axis=0)  # (2D+1, B, D)
-    vals = f(stacked.reshape((2 * D + 1) * B, D)).reshape(2 * D + 1, B)
+    A = D if n_active is None else n_active
+    eye = jnp.eye(A, D, dtype=x.dtype) * jnp.asarray(h, dtype=x.dtype)
+    plus = x[None, :, :] + eye[:, None, :]    # (A, B, D)
+    minus = x[None, :, :] - eye[:, None, :]   # (A, B, D)
+    stacked = jnp.concatenate([x[None], plus, minus], axis=0)  # (2A+1, B, D)
+    vals = f(stacked.reshape((2 * A + 1) * B, D)).reshape(2 * A + 1, B)
     u0 = vals[0]
-    up = vals[1:D + 1]        # (D, B)
-    um = vals[D + 1:]         # (D, B)
-    grad = ((up - um) / (2.0 * h)).T           # (B, D)
+    up = vals[1:A + 1]        # (A, B)
+    um = vals[A + 1:]         # (A, B)
+    grad = ((up - um) / (2.0 * h)).T           # (B, A)
     hess = ((up - 2.0 * u0[None] + um) / (h * h)).T
     return DerivativeEstimate(u=u0, grad=grad, hess_diag=hess)
 
 
 def stein_estimate(f: Callable[[jax.Array], jax.Array], x: jax.Array,
                    key: jax.Array, sigma: float = 5e-2,
-                   num_samples: int = 32) -> DerivativeEstimate:
+                   num_samples: int = 32,
+                   n_active: int | None = None) -> DerivativeEstimate:
     """Antithetic Gaussian-smoothing Stein estimator.
 
     Uses S antithetic pairs (z, −z): 2S+1 stacked inferences.
       ∇u   ≈ (1/S) Σ [u(x+σz) − u(x−σz)] z / (2σ)
       ∂²_i ≈ (1/S) Σ [u(x+σz) − 2u(x) + u(x−σz)] (z_i²) / σ²  ⊘ E[z_i²]=1
     (the antithetic form cancels the (z²−1) bias term's odd part).
+
+    ``n_active`` zeroes the Gaussian directions beyond the first A
+    coordinates (coefficient-conditioned rows: the trailing coefficient
+    slots are held fixed, so the smoothing never mixes scenarios); the
+    returned leaves keep full column width — the extra columns are exact
+    zeros.  A = D when None (legacy path untouched).
     """
     B, D = x.shape
     S = num_samples
     z = jax.random.normal(key, (S, B, D), dtype=x.dtype)
+    if n_active is not None and n_active < D:
+        z = z * (jnp.arange(D) < n_active).astype(x.dtype)
     plus = x[None] + sigma * z
     minus = x[None] - sigma * z
     stacked = jnp.concatenate([x[None], plus, minus], axis=0)  # (2S+1, B, D)

@@ -63,14 +63,49 @@ def lm_batch_iterator(cfg: DataConfig, start_step: int = 0,
 
 def pde_collocation_iterator(n: int, space_dim: int = 20, seed: int = 0,
                              start_step: int = 0,
-                             pde: str | None = None) -> Iterator[jax.Array]:
+                             pde: str | None = None,
+                             problem=None,
+                             coeffs_per_step: int | None = None
+                             ) -> Iterator[jax.Array]:
     """Counter-based collocation stream.  ``pde`` selects a registered
-    problem's own domain sampler (``repro.pde``); the default keeps the
-    legacy HJB-domain behavior parameterized by ``space_dim``."""
-    if pde is not None:
+    problem's own domain sampler (``repro.pde``); an explicit ``problem``
+    instance overrides the registry lookup (how the trainer threads
+    ``--coeff-range`` rebuilt specs through); the default keeps the
+    legacy HJB-domain behavior parameterized by ``space_dim``.
+
+    ``coeffs_per_step`` (conditioned problems only) switches the
+    coefficient draw from per-point iid — the problem sampler's default —
+    to C scenario draws per step tiled over the batch: n // C consecutive
+    points share each coefficient vector.  Grouped draws expose the model
+    to whole mini-trajectories per scenario, which stabilizes early
+    conditioned training; the counter-based key derivation keeps both
+    modes restart-safe and deterministic.
+    """
+    if problem is None and pde is not None:
         from repro import pde as pde_lib
         problem = pde_lib.get_problem(pde)
-        sample = lambda key: problem.sample_collocation(key, n)
+    if problem is not None:
+        if coeffs_per_step is not None:
+            spec = problem.coeff_spec
+            if spec is None:
+                raise ValueError(
+                    f"coeffs_per_step set but PDE {problem.name!r} is not "
+                    "coefficient-conditioned")
+            if not 1 <= coeffs_per_step <= n:
+                raise ValueError(
+                    f"coeffs_per_step must be in [1, {n}], "
+                    f"got {coeffs_per_step}")
+
+            def sample(key):
+                kx, kc = jax.random.split(key)
+                pts = problem.sample_collocation(kx, n)[:, :problem.in_dim]
+                draws = spec.sample(kc, coeffs_per_step)    # (C, K)
+                reps = -(-n // coeffs_per_step)             # ceil(n / C)
+                tiled = jnp.repeat(draws, reps, axis=0)[:n]
+                return jnp.concatenate(
+                    [pts, tiled.astype(pts.dtype)], axis=-1)
+        else:
+            sample = lambda key: problem.sample_collocation(key, n)
     else:
         sample = lambda key: pinn_lib.sample_collocation(key, n, space_dim)
     step = start_step

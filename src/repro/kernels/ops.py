@@ -82,10 +82,15 @@ def tt_linear(x: jax.Array, cores: Sequence[jax.Array], spec: tt_lib.TTSpec,
 
 def tt_linear_batched(x: jax.Array, cores: Sequence[jax.Array],
                       spec: tt_lib.TTSpec,
-                      mode: str | None = None, quant=None) -> jax.Array:
+                      mode: str | None = None, quant=None,
+                      shared_x: bool | None = None) -> jax.Array:
     """P stacked TT-linears in one program — the ZO multi-perturbation path.
 
     cores: each ``(P, r, m, n, r')``; x ``(B, N)`` shared or ``(P, B, N)``.
+    Extra batch axes (e.g. a perturbations × coefficients × points input)
+    are flattened for the launch and restored on the output; ``shared_x``
+    disambiguates when rank inference is ambiguous (None = legacy rule:
+    rank 2 shared, otherwise per-P with a leading P axis).
     With weight quantization on (``quant.weights``), ref mode fake-quants
     in pure jnp (the CPU oracle) and pallas/interpret dispatch to the
     narrow-dtype kernel that dequantizes block-scaled cores in VMEM —
@@ -94,13 +99,17 @@ def tt_linear_batched(x: jax.Array, cores: Sequence[jax.Array],
     mode = mode or kernel_mode()
     if _weight_quant(quant):
         if mode == "ref":
-            return _ref.tt_contract_batched_quant_ref(x, cores, spec, quant)
+            return _ref.tt_contract_batched_quant_ref(x, cores, spec, quant,
+                                                      shared_x=shared_x)
         return _ttc.tt_contract_batched_quant(
-            x, tuple(cores), spec, quant, interpret=(mode == "interpret"))
+            x, tuple(cores), spec, quant, interpret=(mode == "interpret"),
+            shared_x=shared_x)
     if mode == "ref":
-        return _ref.tt_contract_batched_ref(x, cores, spec)
+        return _ref.tt_contract_batched_ref(x, cores, spec,
+                                            shared_x=shared_x)
     return _ttc.tt_contract_batched(x, tuple(cores), spec,
-                                    interpret=(mode == "interpret"))
+                                    interpret=(mode == "interpret"),
+                                    shared_x=shared_x)
 
 
 def mesh_apply_stacked(layout, phases: jax.Array, diag: jax.Array,

@@ -27,11 +27,29 @@ def tt_contract_ref(x: jax.Array, cores: Sequence[jax.Array],
     return tt_lib.tt_matvec(cores, x, spec)
 
 
+def _split_batch_axes_ref(x: jax.Array, P: int, spec: tt_lib.TTSpec,
+                          shared_x: bool | None):
+    """Mirror of ``tt_contract._split_batch_axes`` for the jnp oracles:
+    flatten extra batch axes to the rank the stacked chain consumes."""
+    if shared_x is None:
+        shared_x = x.ndim == 2
+    if shared_x:
+        return x.reshape(-1, spec.in_dim), x.shape[:-1]
+    if x.shape[0] != P:
+        raise ValueError(f"x leading axis {x.shape[0]} != core stack P={P}")
+    return x.reshape(P, -1, spec.in_dim), x.shape[1:-1]
+
+
 def tt_contract_batched_ref(x: jax.Array, cores: Sequence[jax.Array],
-                            spec: tt_lib.TTSpec) -> jax.Array:
+                            spec: tt_lib.TTSpec,
+                            shared_x: bool | None = None) -> jax.Array:
     """Oracle for the multi-perturbation kernel: vmap of the chain over the
-    leading core-stack axis (x shared ``(B,N)`` or stacked ``(P,B,N)``)."""
-    return tt_lib.tt_matvec_stacked(cores, x, spec)
+    leading core-stack axis (x shared ``(B,N)`` or stacked ``(P,B,N)``;
+    extra batch axes flatten and reshape back, as in the kernel)."""
+    P = cores[0].shape[0]
+    xf, batch_shape = _split_batch_axes_ref(x, P, spec, shared_x)
+    y = tt_lib.tt_matvec_stacked(cores, xf, spec)
+    return y.reshape((P,) + batch_shape + (spec.out_dim,))
 
 
 def tt_contract_quant_ref(x: jax.Array, cores: Sequence[jax.Array],
@@ -47,14 +65,18 @@ def tt_contract_quant_ref(x: jax.Array, cores: Sequence[jax.Array],
 
 def tt_contract_batched_quant_ref(x: jax.Array, cores: Sequence[jax.Array],
                                   spec: tt_lib.TTSpec,
-                                  quant: quant_lib.QuantConfig) -> jax.Array:
+                                  quant: quant_lib.QuantConfig,
+                                  shared_x: bool | None = None) -> jax.Array:
     """Quantized oracle for the multi-perturbation kernel: per-stack fake
     quantization (each of the P core variants gets its own block scales —
     matching the kernel's ``(P, n_blocks)`` scale layout), then the
     stacked f32 chain."""
     fq = [jax.vmap(lambda c: quant_lib.fake_quant(c, quant))(c)
           for c in cores]
-    return tt_lib.tt_matvec_stacked(fq, x, spec)
+    P = fq[0].shape[0]
+    xf, batch_shape = _split_batch_axes_ref(x, P, spec, shared_x)
+    y = tt_lib.tt_matvec_stacked(fq, xf, spec)
+    return y.reshape((P,) + batch_shape + (spec.out_dim,))
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

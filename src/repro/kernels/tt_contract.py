@@ -136,10 +136,33 @@ def _batched_kernel(spec: tt_lib.TTSpec, n_cores: int, shared_x: bool, *refs):
     o_ref[...] = y.reshape(o_ref.shape).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "batch_tile", "interpret"))
+def _split_batch_axes(x: jax.Array, P: int, spec: tt_lib.TTSpec,
+                      shared_x: bool | None):
+    """Resolve the ``shared_x`` flag and flatten extra batch axes.
+
+    ``shared_x=None`` keeps the legacy inference — 2-D x is shared, any
+    higher rank is per-perturbation with a leading P axis.  An explicit
+    flag disambiguates multi-axis inputs (e.g. a shared coefficients ×
+    points grid ``(C, B, N)`` where C happens to equal P).  Returns
+    ``(xf, batch_shape, shared)`` with xf rank 2 (shared) or 3 (per-P).
+    """
+    if shared_x is None:
+        shared_x = x.ndim == 2
+    if shared_x:
+        batch_shape = x.shape[:-1]
+        return x.reshape(-1, spec.in_dim), batch_shape, True
+    if x.shape[0] != P:
+        raise ValueError(f"x leading axis {x.shape[0]} != core stack P={P}")
+    batch_shape = x.shape[1:-1]
+    return x.reshape(P, -1, spec.in_dim), batch_shape, False
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "batch_tile",
+                                             "interpret", "shared_x"))
 def tt_contract_batched(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
                         batch_tile: int | None = None,
-                        interpret: bool = False) -> jax.Array:
+                        interpret: bool = False,
+                        shared_x: bool | None = None) -> jax.Array:
     """``y[p] = x[p] @ W(cores[p])^T`` for P stacked core-sets, one launch.
 
     cores: tuple of ``(P, r, m, n, r')`` arrays — one TT-core stack per chain
@@ -147,6 +170,13 @@ def tt_contract_batched(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
     x: ``(B, N)`` shared across all P (e.g. the collocation stencil feeding
     layer 1 of every perturbed model) or ``(P, B, N)`` per-perturbation
     activations.  Returns ``(P, B, M)``.
+
+    Extra batch axes are allowed on either flavor — ``(C, B, N)`` shared
+    (a coefficients × points grid evaluated under every perturbation) or
+    ``(P, C, B, N)`` per-perturbation — and flattened for the launch, with
+    the output reshaped back to ``(P, *batch_axes, M)``.  ``shared_x``
+    disambiguates when inference from rank alone is ambiguous (None keeps
+    the legacy rule: rank 2 = shared, otherwise per-P).
 
     Grid ``(P, B/bt)``; each program holds ONE perturbation's (tiny) cores
     plus one batch tile in VMEM, so HBM traffic for the shared-x case is
@@ -156,9 +186,7 @@ def tt_contract_batched(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
     if not cores:
         raise ValueError("need at least one core stack")
     P = cores[0].shape[0]
-    shared_x = x.ndim == 2
-    if not shared_x and x.shape[0] != P:
-        raise ValueError(f"x leading axis {x.shape[0]} != core stack P={P}")
+    x, batch_shape, shared_x = _split_batch_axes(x, P, spec, shared_x)
     B = x.shape[-2]
     bt = batch_tile or default_batch_tile(spec)
     bt = min(bt, B)
@@ -189,7 +217,7 @@ def tt_contract_batched(x: jax.Array, cores: tuple, spec: tt_lib.TTSpec,
         out_shape=jax.ShapeDtypeStruct((P, Bp, spec.out_dim), x.dtype),
         interpret=interpret,
     )(x, *flat)
-    return y[:, :B]
+    return y[:, :B].reshape((P,) + batch_shape + (spec.out_dim,))
 
 
 def _batched_quant_kernel(spec: tt_lib.TTSpec, n_cores: int, shared_x: bool,
@@ -218,12 +246,13 @@ def _batched_quant_kernel(spec: tt_lib.TTSpec, n_cores: int, shared_x: bool,
 
 @functools.partial(jax.jit,
                    static_argnames=("spec", "quant", "batch_tile",
-                                    "interpret"))
+                                    "interpret", "shared_x"))
 def tt_contract_batched_quant(x: jax.Array, cores: tuple,
                               spec: tt_lib.TTSpec,
                               quant: quant_lib.QuantConfig,
                               batch_tile: int | None = None,
-                              interpret: bool = False) -> jax.Array:
+                              interpret: bool = False,
+                              shared_x: bool | None = None) -> jax.Array:
     """``tt_contract_batched`` with block-scaled int8/fp8-e4m3 cores.
 
     Each of the P core variants is quantized independently
@@ -232,16 +261,15 @@ def tt_contract_batched_quant(x: jax.Array, cores: tuple,
     and dequantized in-kernel before the chain — so HBM weight traffic
     drops to ~1.125 B/param (block=32) and the math matches
     ``kernels.ref.tt_contract_batched_quant_ref`` exactly (same
-    quantizer, f32 accumulation in both).
+    quantizer, f32 accumulation in both).  Extra batch axes and the
+    ``shared_x`` flag behave as in ``tt_contract_batched``.
     """
     if not quant.weights:
         raise ValueError(f"weight quantization not enabled in {quant}")
     if not cores:
         raise ValueError("need at least one core stack")
     P = cores[0].shape[0]
-    shared_x = x.ndim == 2
-    if not shared_x and x.shape[0] != P:
-        raise ValueError(f"x leading axis {x.shape[0]} != core stack P={P}")
+    x, batch_shape, shared_x = _split_batch_axes(x, P, spec, shared_x)
     B = x.shape[-2]
     bt = batch_tile or default_batch_tile(spec)
     bt = min(bt, B)
@@ -278,4 +306,4 @@ def tt_contract_batched_quant(x: jax.Array, cores: tuple,
         out_shape=jax.ShapeDtypeStruct((P, Bp, spec.out_dim), x.dtype),
         interpret=interpret,
     )(x, *qs, *ss)
-    return y[:, :B]
+    return y[:, :B].reshape((P,) + batch_shape + (spec.out_dim,))

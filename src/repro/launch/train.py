@@ -62,6 +62,47 @@ def build_train_step(cfg, optimizer, compress_pod_grads: bool = False):
 PINN_ARCHS = ("hjb-pinn", "tensor-pinn")
 
 
+def _parse_coeff_ranges(text: str) -> dict:
+    """``name=lo:hi[,name=lo:hi]`` → {name: (lo, hi)} for --coeff-range."""
+    out = {}
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            name, rng = part.split("=")
+            lo, hi = (float(v) for v in rng.split(":"))
+        except ValueError:
+            raise SystemExit(
+                f"--coeff-range: malformed entry {part!r} "
+                "(expected name=lo:hi[,name=lo:hi])")
+        out[name.strip()] = (lo, hi)
+    if not out:
+        raise SystemExit("--coeff-range: no ranges given")
+    return out
+
+
+def _conditioned_problem(args):
+    """Resolve --pde plus any --coeff-range/--coeff-dist overrides into a
+    problem instance (None → let the config/model resolve the name as
+    before).  Overrides rebind ``coeff_spec`` on a fresh registry instance:
+    ranges only drive sampling/normalization/validation, never the residual
+    (which reads raw coefficient values off the input slots)."""
+    if not (args.coeff_range or args.coeff_dist):
+        return None
+    from repro import pde as pde_lib
+    problem = pde_lib.get_problem(args.pde)
+    if problem.coeff_spec is None:
+        raise SystemExit(
+            f"--coeff-range/--coeff-dist need a coefficient-conditioned "
+            f"PDE; {args.pde!r} is not (try one of "
+            f"{[n for n in pde_lib.available() if pde_lib.get_problem(n).coeff_spec]})")
+    ranges = _parse_coeff_ranges(args.coeff_range) if args.coeff_range else {}
+    problem.coeff_spec = problem.coeff_spec.with_ranges(
+        ranges, dist=args.coeff_dist)
+    return problem
+
+
 def train_pinn(args):
     """BP-free PINN training on a registered PDE workload (paper §3–§4).
 
@@ -86,12 +127,19 @@ def train_pinn(args):
             phase_bits=args.phase_bits)
     cfg = build(pde=args.pde, mode=args.pinn_mode, fused=not args.sequential,
                 noise=args.pinn_noise, **overrides)
-    model = pinn.TensorPinn(cfg)
+    problem_override = _conditioned_problem(args)
+    model = pinn.TensorPinn(cfg, problem=problem_override)
     problem = model.problem
     print(f"[pinn] pde={problem.name} in_dim={problem.in_dim} "
           f"mode={cfg.mode} hidden={cfg.hidden} deriv={cfg.deriv} "
           f"fused={cfg.use_fused_kernel}"
           + (f" quant={cfg.quant.tag()}" if cfg.quant.enabled else ""))
+    if problem.coeff_spec is not None:
+        spec = problem.coeff_spec
+        print("[pinn] conditioned on "
+              + ", ".join(f"{n}∈[{lo:g}, {hi:g}]" for n, lo, hi
+                          in zip(spec.names, spec.lo, spec.hi))
+              + f" ({spec.dist}); net_in={problem.net_dim}")
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
@@ -114,6 +162,11 @@ def train_pinn(args):
     # side-channel (DESIGN.md §Serving)
     ckpt_meta = {"pinn": pinn.config_to_meta(cfg), "pde": problem.name,
                  "seed": args.seed}
+    if problem.coeff_spec is not None:
+        # the trained coefficient ranges travel with the checkpoint: serving
+        # restores them to normalize inputs identically and to reject
+        # queries outside the trained family (DESIGN.md §Parameterized)
+        ckpt_meta["coeff_spec"] = problem.coeff_spec.to_meta()
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, keep=3,
                                 save_every=args.ckpt_every,
@@ -203,7 +256,9 @@ def train_pinn(args):
 
     # restart-safe counter-based collocation stream (shared data pipeline)
     colloc = pde_collocation_iterator(args.batch, seed=args.seed,
-                                      start_step=start_step, pde=args.pde)
+                                      start_step=start_step, pde=args.pde,
+                                      problem=problem_override,
+                                      coeffs_per_step=args.coeffs_per_step)
     for step in range(start_step, args.steps):
         xt = next(colloc)
         bc = (problem.boundary_batch(
@@ -287,6 +342,17 @@ def main(argv=None):
     ap.add_argument("--phase-bits", type=int, default=None,
                     help="DAC resolution: snap trainable MZI phases to the "
                          "uniform 2π/2^bits grid (hardware-faithful knob)")
+    ap.add_argument("--coeff-range", default=None,
+                    help="override the trained coefficient ranges of a "
+                         "conditioned PDE: name=lo:hi[,name=lo:hi] "
+                         "(e.g. kappa=0.5:2.0)")
+    ap.add_argument("--coeff-dist", default=None,
+                    choices=[None, "uniform", "loguniform"],
+                    help="coefficient sampling distribution override")
+    ap.add_argument("--coeffs-per-step", type=int, default=None,
+                    help="grouped scenario sampling: C coefficient draws "
+                         "per step tiled over the batch instead of "
+                         "per-point iid")
     args = ap.parse_args(argv)
 
     if args.arch in PINN_ARCHS:

@@ -7,21 +7,31 @@ Importing this package registers the built-in workload suite:
   * ``heat-10d`` / ``heat-20d``     — heat equation, Gaussian exact solution,
   * ``black-scholes-100d``          — 100-dim Black–Scholes–Barenblatt,
   * ``helmholtz-2d``                — steady Helmholtz with a Dirichlet
-                                      boundary loss (paper Eq. 4's L_b).
+                                      boundary loss (paper Eq. 4's L_b),
+
+plus the coefficient-conditioned families (DESIGN.md §Parameterized
+families) — one checkpoint amortized over a sampled coefficient range,
+verified against the per-coefficient closed forms:
+
+  * ``heat-10d-kappa``              — diffusivity κ ∈ [0.5, 2.0],
+  * ``hjb-10d-lam``                 — control cost λ ∈ [0.05, 0.15],
+  * ``black-scholes-8d-rs`` /
+    ``black-scholes-100d-rs``      — rate r ∈ [0.01, 0.1] × vol σ ∈ [0.2, 0.6].
 
 ``get_problem(name)`` resolves a name to a fresh ``PDEProblem``;
 ``available()`` lists the registry.
 """
 
-from repro.pde.base import (PDEProblem, available, estimate_from_u_stencil,
-                            fd_stencil_points, get_problem, register)
+from repro.pde.base import (CoeffSpec, PDEProblem, available,
+                            estimate_from_u_stencil, fd_stencil_points,
+                            get_problem, register)
 from repro.pde import black_scholes, heat, helmholtz, hjb  # noqa: F401 (register)
 from repro.pde.black_scholes import BlackScholesProblem
 from repro.pde.heat import HeatProblem
 from repro.pde.helmholtz import HelmholtzProblem
 from repro.pde.hjb import HJBProblem
 
-__all__ = ["PDEProblem", "register", "get_problem", "available",
-           "fd_stencil_points", "estimate_from_u_stencil",
+__all__ = ["CoeffSpec", "PDEProblem", "register", "get_problem",
+           "available", "fd_stencil_points", "estimate_from_u_stencil",
            "HJBProblem", "HeatProblem", "BlackScholesProblem",
            "HelmholtzProblem"]

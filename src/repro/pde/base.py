@@ -34,15 +34,133 @@ and resolve by name: ``get_problem("heat-20d")``.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import stein
 
-__all__ = ["PDEProblem", "register", "get_problem", "available",
-           "fd_stencil_points", "estimate_from_u_stencil"]
+__all__ = ["CoeffSpec", "PDEProblem", "register", "get_problem",
+           "available", "fd_stencil_points", "estimate_from_u_stencil"]
+
+
+# ------------------------------------------------------- coefficient families
+
+@dataclasses.dataclass(frozen=True)
+class CoeffSpec:
+    """Named PDE-coefficient vector with sampling ranges.
+
+    A coefficient-conditioned problem (``PDEProblem.coeff_spec`` set)
+    operates on *augmented rows* of width ``net_dim = in_dim + n``: the
+    physical point first, then the coefficient values in ``names`` order,
+    in RAW units (the model normalizes them to [0,1] input slots
+    internally).  ``sample_collocation`` appends a fresh per-point draw,
+    so the stacked evaluator, the FD stencil machinery, the serving slot
+    pool and the stencil cache all see coefficients as ordinary input
+    columns — perturbations × coefficients is just perturbations × rows.
+
+    ``dist`` is ``"uniform"`` or ``"loguniform"`` (log-uniform needs
+    strictly positive ranges — rates/volatilities/diffusivities).
+    """
+
+    names: tuple
+    lo: tuple
+    hi: tuple
+    dist: str = "uniform"
+
+    def __post_init__(self):
+        object.__setattr__(self, "names", tuple(self.names))
+        object.__setattr__(self, "lo", tuple(float(v) for v in self.lo))
+        object.__setattr__(self, "hi", tuple(float(v) for v in self.hi))
+        if not (len(self.names) == len(self.lo) == len(self.hi)):
+            raise ValueError("names/lo/hi length mismatch")
+        if not self.names:
+            raise ValueError("CoeffSpec needs at least one coefficient")
+        if self.dist not in ("uniform", "loguniform"):
+            raise ValueError(f"unknown coefficient dist {self.dist!r}")
+        for nm, a, b in zip(self.names, self.lo, self.hi):
+            if not a < b:
+                raise ValueError(f"coefficient {nm!r}: need lo < hi, "
+                                 f"got [{a}, {b}]")
+            if self.dist == "loguniform" and a <= 0.0:
+                raise ValueError(f"coefficient {nm!r}: loguniform needs "
+                                 f"lo > 0, got {a}")
+
+    @property
+    def n(self) -> int:
+        return len(self.names)
+
+    def sample(self, key: jax.Array, n: int) -> jax.Array:
+        """(n, K) coefficient draws in RAW units."""
+        lo = jnp.asarray(self.lo)
+        hi = jnp.asarray(self.hi)
+        u = jax.random.uniform(key, (n, self.n))
+        if self.dist == "loguniform":
+            return jnp.exp(jnp.log(lo) + u * (jnp.log(hi) - jnp.log(lo)))
+        return lo + u * (hi - lo)
+
+    def normalize(self, c: jax.Array) -> jax.Array:
+        """Raw units → [0,1] network input slots (log-space for
+        loguniform, so the net sees the sampling measure uniformly)."""
+        lo = jnp.asarray(self.lo, dtype=c.dtype)
+        hi = jnp.asarray(self.hi, dtype=c.dtype)
+        if self.dist == "loguniform":
+            return ((jnp.log(c) - jnp.log(lo))
+                    / (jnp.log(hi) - jnp.log(lo)))
+        return (c - lo) / (hi - lo)
+
+    def defaults(self) -> np.ndarray:
+        """(K,) mid-range coefficients (geometric mid for loguniform)."""
+        lo, hi = np.asarray(self.lo), np.asarray(self.hi)
+        if self.dist == "loguniform":
+            return np.sqrt(lo * hi)
+        return 0.5 * (lo + hi)
+
+    def check_in_range(self, c, rtol: float = 1e-6) -> None:
+        """Raise ValueError on a wrong-arity or out-of-range coefficient
+        vector (numpy-friendly: used at the serving boundary, where
+        silent extrapolation outside the trained range must be an
+        error, not a quietly wrong answer)."""
+        c = np.asarray(c, dtype=np.float64).reshape(-1)
+        if c.shape[0] != self.n:
+            raise ValueError(
+                f"expected {self.n} coefficient(s) ({', '.join(self.names)}),"
+                f" got {c.shape[0]}")
+        lo, hi = np.asarray(self.lo), np.asarray(self.hi)
+        slack = rtol * (hi - lo)
+        bad = (c < lo - slack) | (c > hi + slack)
+        if bad.any():
+            msgs = [f"{nm}={v:g} outside trained range [{a:g}, {b:g}]"
+                    for nm, v, a, b, m in
+                    zip(self.names, c, lo, hi, bad) if m]
+            raise ValueError("; ".join(msgs))
+
+    def with_ranges(self, overrides: dict, dist: str | None = None
+                    ) -> "CoeffSpec":
+        """New spec with ``{name: (lo, hi)}`` range overrides applied."""
+        unknown = set(overrides) - set(self.names)
+        if unknown:
+            raise ValueError(f"unknown coefficient(s) {sorted(unknown)}; "
+                             f"this family has {list(self.names)}")
+        lo = list(self.lo)
+        hi = list(self.hi)
+        for nm, (a, b) in overrides.items():
+            i = self.names.index(nm)
+            lo[i], hi[i] = float(a), float(b)
+        return CoeffSpec(self.names, tuple(lo), tuple(hi),
+                         self.dist if dist is None else dist)
+
+    def to_meta(self) -> dict:
+        return {"names": list(self.names), "lo": list(self.lo),
+                "hi": list(self.hi), "dist": self.dist}
+
+    @staticmethod
+    def from_meta(meta: dict) -> "CoeffSpec":
+        return CoeffSpec(tuple(meta["names"]), tuple(meta["lo"]),
+                         tuple(meta["hi"]), meta.get("dist", "uniform"))
 
 
 class PDEProblem:
@@ -62,10 +180,51 @@ class PDEProblem:
     bc_weight: float = 1.0        # λ in L = L_r + λ·L_b (paper Eq. 4)
     fd_step: float = 1e-2         # recommended FD step for this problem
     residual_tol: float = 5e-2    # documented FD noise floor (see above)
+    coeff_spec: CoeffSpec | None = None  # set → coefficient-conditioned
 
     @property
     def in_dim(self) -> int:
+        """Physical input width (x [, t]) — FD stencils differentiate
+        exactly these coordinates, never the coefficient slots."""
         return self.space_dim + (1 if self.time_dependent else 0)
+
+    @property
+    def n_coeffs(self) -> int:
+        return 0 if self.coeff_spec is None else self.coeff_spec.n
+
+    @property
+    def net_dim(self) -> int:
+        """Row width the network consumes: in_dim + n_coeffs.  Every
+        point-shaped array in the stack (collocation batches, stencils,
+        serving slots, cache keys) uses rows of this width."""
+        return self.in_dim + self.n_coeffs
+
+    def split_coeffs(self, xt: jax.Array):
+        """(..., net_dim) rows → ((..., in_dim) points, (..., K) coeffs)."""
+        return xt[..., :self.in_dim], xt[..., self.in_dim:self.net_dim]
+
+    def attach_coeffs(self, pts: jax.Array, coeffs) -> jax.Array:
+        """(n, in_dim) points + one (K,) coefficient vector → (n, net_dim)
+        augmented rows (the serving path: one scenario per request)."""
+        if self.coeff_spec is None:
+            return pts
+        c = jnp.broadcast_to(
+            jnp.asarray(coeffs, dtype=pts.dtype).reshape(-1),
+            (pts.shape[0], self.n_coeffs))
+        return jnp.concatenate([pts, c], axis=-1)
+
+    def _sample_with_coeffs(self, key: jax.Array, n: int,
+                            point_sampler) -> jax.Array:
+        """Shared sampler plumbing: unconditioned problems keep the
+        legacy unsplit-key draw (bit-identical to pre-conditioning
+        checkpoints); conditioned problems split the key and append a
+        fresh per-point coefficient draw."""
+        if self.coeff_spec is None:
+            return point_sampler(key)
+        kx, kc = jax.random.split(key)
+        pts = point_sampler(kx)
+        return jnp.concatenate(
+            [pts, self.coeff_spec.sample(kc, n).astype(pts.dtype)], axis=-1)
 
     # ------------------------------------------------------------- interface
     def sample_collocation(self, key: jax.Array, n: int) -> jax.Array:
@@ -111,12 +270,20 @@ class PDEProblem:
 
 # ---------------------------------------------------------------- FD helpers
 
-def fd_stencil_points(xt: jax.Array, h: float) -> jax.Array:
-    """(2D+1, B, D) central-difference stencil
-    [x, x+h·e_1, ..., x+h·e_D, x−h·e_1, ..., x−h·e_D] of ``stein.fd_estimate``
-    — the point layout every stencil evaluator in the repo shares."""
+def fd_stencil_points(xt: jax.Array, h: float,
+                      n_active: int | None = None) -> jax.Array:
+    """(2A+1, B, D) central-difference stencil
+    [x, x+h·e_1, ..., x+h·e_A, x−h·e_1, ..., x−h·e_A] of ``stein.fd_estimate``
+    — the point layout every stencil evaluator in the repo shares.
+
+    ``n_active`` restricts the differentiated coordinates to the first A
+    columns: coefficient-conditioned rows carry K trailing coefficient
+    slots that the PDE never differentiates, so their stencils shift only
+    the physical ``in_dim`` prefix (A = D when None — bit-identical to the
+    unrestricted form)."""
     B, D = xt.shape
-    eye = jnp.eye(D, dtype=xt.dtype) * jnp.asarray(h, dtype=xt.dtype)
+    A = D if n_active is None else n_active
+    eye = jnp.eye(A, D, dtype=xt.dtype) * jnp.asarray(h, dtype=xt.dtype)
     plus = xt[None, :, :] + eye[:, None, :]
     minus = xt[None, :, :] - eye[:, None, :]
     return jnp.concatenate([xt[None], plus, minus], axis=0)

@@ -6,13 +6,19 @@ deep BSDE) in PINN form:
     ∂_t u + ½σ² Σ_i x_i² ∂²_i u − r (u − Σ_i x_i ∂_i u) = 0,
     u(x, 1) = ‖x‖² / D,   x ∈ [0.5, 1.5]^D, t ∈ [0,1],
 
-with closed-form solution  u(x, t) = exp((r + σ²)(1 − t)) · ‖x‖² / D.
-(The PDE is linear in u, so the 1/D normalization of the terminal payoff —
-which keeps u O(1) at D=100 instead of O(D), critical for float32 FD second
-differences — carries through the solution unchanged.)
+with closed-form solution  u(x, t) = exp((r + σ²)(1 − t)) · ‖x‖² / D
+FOR EVERY rate r and volatility σ — the BSB family is verifiable per
+coefficient pair.  (The PDE is linear in u, so the 1/D normalization of
+the terminal payoff — which keeps u O(1) at D=100 instead of O(D),
+critical for float32 FD second differences — carries through the solution
+unchanged.)
 
 Ansatz: u = (1−t)·f + ‖x‖²/D — terminal condition exact, residual-only loss.
 Default σ = 0.4, r = 0.05 (the literature's configuration).
+
+Conditioning (``r_range`` + ``sigma_range`` set, both or neither): rows
+gain trailing (r, σ) slots sampled per point; the fixed ``r``/``sigma``
+arguments pin a single scenario (dedicated-checkpoint arms).
 """
 
 from __future__ import annotations
@@ -36,27 +42,46 @@ class BlackScholesProblem(base.PDEProblem):
     residual_tol = 1e-2
 
     def __init__(self, space_dim: int = 100, sigma: float = 0.4,
-                 r: float = 0.05, margin: float = 0.02):
+                 r: float = 0.05, margin: float = 0.02,
+                 r_range: tuple[float, float] | None = None,
+                 sigma_range: tuple[float, float] | None = None):
         self.space_dim = space_dim
         self.name = f"black-scholes-{space_dim}d"
-        self.sigma = sigma
-        self.r = r
+        self.sigma = float(sigma)
+        self.r = float(r)
         self.margin = margin
+        if (r_range is None) != (sigma_range is None):
+            raise ValueError("condition on both r and sigma or neither")
+        if r_range is not None:
+            self.coeff_spec = base.CoeffSpec(
+                ("r", "sigma"), (r_range[0], sigma_range[0]),
+                (r_range[1], sigma_range[1]))
+            self.name += "-rs"
+
+    def _rs(self, xt: jax.Array):
+        """(r, σ) per row (conditioned) or the fixed scalars."""
+        if self.coeff_spec is None:
+            return self.r, self.sigma
+        D1 = self.in_dim
+        return xt[..., D1], xt[..., D1 + 1]
 
     def sample_collocation(self, key: jax.Array, n: int) -> jax.Array:
         """x ∈ [0.5+m, 1.5−m]^D, t ∈ [m, 1−m] (margin keeps FD stencils
         inside the domain)."""
-        pts = base.uniform_box(key, n, self.in_dim,
-                               self.margin, 1.0 - self.margin)
-        x, t = pts[:, :-1] + 0.5, pts[:, -1:]
-        return jnp.concatenate([x, t], axis=-1)
+        def points(k):
+            pts = base.uniform_box(k, n, self.in_dim,
+                                   self.margin, 1.0 - self.margin)
+            x, t = pts[:, :-1] + 0.5, pts[:, -1:]
+            return jnp.concatenate([x, t], axis=-1)
+        return self._sample_with_coeffs(key, n, points)
 
     def _terminal(self, x: jax.Array) -> jax.Array:
         return jnp.sum(x * x, axis=-1) / self.space_dim
 
     def ansatz(self, f: jax.Array, xt: jax.Array) -> jax.Array:
-        """u = (1−t)·f + ‖x‖²/D (terminal condition exact)."""
-        x, t = xt[..., :-1], xt[..., -1]
+        """u = (1−t)·f + ‖x‖²/D (terminal condition exact for every r, σ)."""
+        D = self.space_dim
+        x, t = xt[..., :D], xt[..., D]
         return (1.0 - t) * f + self._terminal(x)
 
     def residual(self, est: stein.DerivativeEstimate,
@@ -64,18 +89,35 @@ class BlackScholesProblem(base.PDEProblem):
         """u_t + ½σ² Σ x_i²∂²_i u − r(u − Σ x_i ∂_i u)."""
         D = self.space_dim
         x = xt[..., :D]
+        r, sigma = self._rs(xt)
         u_t = est.grad[..., D]
-        diff = 0.5 * self.sigma ** 2 * jnp.sum(
+        diff = 0.5 * sigma ** 2 * jnp.sum(
             x * x * est.hess_diag[..., :D], axis=-1)
-        drift = self.r * (est.u - jnp.sum(x * est.grad[..., :D], axis=-1))
+        drift = r * (est.u - jnp.sum(x * est.grad[..., :D], axis=-1))
         return u_t + diff - drift
 
     def exact_solution(self, xt: jax.Array) -> jax.Array:
-        x, t = xt[..., :-1], xt[..., -1]
-        return jnp.exp((self.r + self.sigma ** 2) * (1.0 - t)) \
-            * self._terminal(x)
+        D = self.space_dim
+        x, t = xt[..., :D], xt[..., D]
+        r, sigma = self._rs(xt)
+        return jnp.exp((r + sigma ** 2) * (1.0 - t)) * self._terminal(x)
 
 
 @base.register("black-scholes-100d")
 def _bs_100d() -> BlackScholesProblem:
     return BlackScholesProblem(space_dim=100)
+
+
+@base.register("black-scholes-8d-rs")
+def _bs_8d_rs() -> BlackScholesProblem:
+    """Conditioned family at a CI-friendly dimension: rate r ∈ [0.01, 0.1],
+    volatility σ ∈ [0.2, 0.6] as two trailing input slots."""
+    return BlackScholesProblem(space_dim=8, r_range=(0.01, 0.1),
+                               sigma_range=(0.2, 0.6))
+
+
+@base.register("black-scholes-100d-rs")
+def _bs_100d_rs() -> BlackScholesProblem:
+    """The 100-asset benchmark as a conditioned (r, σ) family."""
+    return BlackScholesProblem(space_dim=100, r_range=(0.01, 0.1),
+                               sigma_range=(0.2, 0.6))

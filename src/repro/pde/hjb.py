@@ -1,10 +1,23 @@
 """The paper's 20-dim Hamilton–Jacobi–Bellman benchmark (paper Eq. 7, §4).
 
     ∂_t u + Δu − λ ‖∇_x u‖₂² = −2,   λ = 1/D (paper: 0.05 at D = 20),
-    u(x, 1) = ‖x‖₁,  x ∈ [0,1]^D, t ∈ [0,1];   exact: u = ‖x‖₁ + 1 − t.
+    u(x, 1) = ‖x‖₁,  x ∈ [0,1]^D, t ∈ [0,1].
+
+The exact solution generalizes across the control-cost coefficient λ:
+u = ‖x‖₁ + c·(1−t) has u_t = −c, Δu = 0, ‖∇u‖² = D, so the residual
+−c − λD + 2 vanishes iff
+
+    u(x, t) = ‖x‖₁ + (2 − λ D)(1 − t)
+
+— a closed form per λ, which is what makes HJB a verifiable coefficient
+family (λ = 1/D recovers the paper's u = ‖x‖₁ + 1 − t).
 
 The ansatz  u = (1−t)·f + ‖x‖₁  satisfies the terminal condition exactly,
 so training minimizes the residual loss alone (no L_b term).
+
+Conditioning (``lam_range`` set): rows gain a trailing λ slot sampled per
+point; a fixed ``lam`` pins a single coefficient (dedicated-checkpoint
+arms); default λ = 1/D keeps the legacy bit-identical expressions.
 """
 
 from __future__ import annotations
@@ -25,15 +38,29 @@ class HJBProblem(base.PDEProblem):
     # over D Laplacian terms (the seed's exact-solution test bound).
     residual_tol = 5e-2
 
-    def __init__(self, space_dim: int = 20, margin: float = 0.02):
+    def __init__(self, space_dim: int = 20, margin: float = 0.02,
+                 lam: float | None = None,
+                 lam_range: tuple[float, float] | None = None):
         self.space_dim = space_dim
         self.name = f"hjb-{space_dim}d"
         self.margin = margin
-        # Eq. 7's 0.05 is 1/D at the paper's D=20: the exact solution
-        # u = ‖x‖₁ + 1 − t has u_t = −1, Δu = 0, ‖∇u‖² = D, so the residual
-        # −1 − λD + 2 vanishes iff λ = 1/D.  Generalizing keeps the same
-        # closed form at every dimension.
-        self.lam = 1.0 / space_dim
+        # Eq. 7's 0.05 is 1/D at the paper's D=20: at λ = 1/D the exact
+        # solution's time slope 2 − λD is exactly 1, the paper's closed
+        # form, at every dimension.  ``_lam_default`` tracks that case so
+        # the legacy literal 1.0 − t stays bit-identical (2.0 − (1/D)·D
+        # is 0.999... in float for non-power-of-two D).
+        self._lam_default = lam is None and lam_range is None
+        self.lam = (1.0 / space_dim) if lam is None else float(lam)
+        if lam_range is not None:
+            self.coeff_spec = base.CoeffSpec(
+                ("lam",), (lam_range[0],), (lam_range[1],))
+            self.name += "-lam"
+
+    def _lam(self, xt: jax.Array):
+        """λ per row (conditioned) or the fixed scalar."""
+        if self.coeff_spec is None:
+            return self.lam
+        return xt[..., self.in_dim]
 
     def sample_collocation(self, key: jax.Array, n: int) -> jax.Array:
         """Uniform (x, t) ∈ [margin, 1−margin]^D × [margin, 1−margin].
@@ -41,28 +68,36 @@ class HJBProblem(base.PDEProblem):
         The margin keeps FD stencils away from the |x| kink at 0 and the
         domain boundary (the exact solution is smooth inside).
         """
-        return base.uniform_box(key, n, self.in_dim,
-                                self.margin, 1.0 - self.margin)
+        return self._sample_with_coeffs(
+            key, n, lambda k: base.uniform_box(k, n, self.in_dim,
+                                               self.margin,
+                                               1.0 - self.margin))
 
     def ansatz(self, f: jax.Array, xt: jax.Array) -> jax.Array:
-        """u = (1−t)·f + ‖x‖₁ (terminal condition exact)."""
-        x, t = xt[..., :-1], xt[..., -1]
+        """u = (1−t)·f + ‖x‖₁ (terminal condition exact for every λ)."""
+        D = self.space_dim
+        x, t = xt[..., :D], xt[..., D]
         return (1.0 - t) * f + jnp.sum(jnp.abs(x), axis=-1)
 
     def residual(self, est: stein.DerivativeEstimate,
                  xt: jax.Array) -> jax.Array:
         """Paper Eq. 7: residual = u_t + Δ_x u − λ ‖∇_x u‖² + 2, λ = 1/D
-        (= the paper's 0.05 at D=20)."""
+        (= the paper's 0.05 at D=20) unless fixed or conditioned."""
         D = self.space_dim
         u_t = est.grad[..., D]
         grad_x = est.grad[..., :D]
         lap = jnp.sum(est.hess_diag[..., :D], axis=-1)
-        return u_t + lap - self.lam * jnp.sum(grad_x * grad_x, axis=-1) + 2.0
+        return (u_t + lap
+                - self._lam(xt) * jnp.sum(grad_x * grad_x, axis=-1) + 2.0)
 
     def exact_solution(self, xt: jax.Array) -> jax.Array:
-        """u(x,t) = ‖x‖₁ + 1 − t."""
-        x, t = xt[..., :-1], xt[..., -1]
-        return jnp.sum(jnp.abs(x), axis=-1) + 1.0 - t
+        """u(x,t) = ‖x‖₁ + (2 − λD)(1 − t)  (= ‖x‖₁ + 1 − t at λ = 1/D)."""
+        D = self.space_dim
+        x, t = xt[..., :D], xt[..., D]
+        l1 = jnp.sum(jnp.abs(x), axis=-1)
+        if self._lam_default:
+            return l1 + 1.0 - t   # legacy expression, bit-identical
+        return l1 + (2.0 - self._lam(xt) * D) * (1.0 - t)
 
 
 @base.register("hjb-20d")
@@ -73,3 +108,9 @@ def _hjb_20d() -> HJBProblem:
 @base.register("hjb-10d")
 def _hjb_10d() -> HJBProblem:
     return HJBProblem(space_dim=10)
+
+
+@base.register("hjb-10d-lam")
+def _hjb_10d_lam() -> HJBProblem:
+    """Conditioned family: control cost λ ∈ [0.05, 0.15] (1/D = 0.1 mid)."""
+    return HJBProblem(space_dim=10, lam_range=(0.05, 0.15))

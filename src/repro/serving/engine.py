@@ -11,9 +11,11 @@ The three invariants the whole design hangs on:
     ``(solver, dtype, slot-shape)`` triple, AOT-compiled (``jit.lower(...)
     .compile()``) the first time that triple sees traffic and reused for
     every subsequent step; its input shape is always the FULL pool
-    ``(slots·slot_points, in_dim)``, so no request mix, queue depth, or
-    request size can ever trigger a recompile.  ``stats["compiles"]``
-    counts program builds and the tests pin it.
+    ``(slots·slot_points, net_dim)`` (physical dims + coefficient slots
+    for conditioned solvers — coefficient VALUES are input data, never
+    part of the key), so no request mix, queue depth, request size, or
+    coefficient instance can ever trigger a recompile.
+    ``stats["compiles"]`` counts program builds and the tests pin it.
   * **pad-to-slot, bit-identical** — a chunk shorter than a slot pads with
     an in-domain fill point and idle slots evaluate pure fill; XLA:CPU/TPU
     GEMMs reduce over the contraction axis per output row, so a row's
@@ -67,12 +69,22 @@ class PointRequest:
     inference: it extends the program key — one extra AOT program per
     (solver, dtype, quant, slot-shape), compiled once like any other —
     and isolates the request's cache entries under the quant tag.
+    ``coeffs`` (one ``(K,)`` vector of RAW coefficient values, e.g.
+    ``[kappa]``) selects the PDE instance a coefficient-conditioned
+    solver evaluates: required for conditioned solvers, rejected for
+    unconditioned ones, and validated against the TRAINED ranges at
+    submit time.  The values ride in the input rows (every point gets
+    the vector appended), never in the program key, so one AOT program
+    serves the whole coefficient family with zero extra compiles; the
+    augmented rows also key the stencil cache, isolating coefficient
+    instances from each other automatically.
     """
 
     solver: str
-    points: np.ndarray                    # (n, in_dim)
+    points: np.ndarray                    # (n, in_dim) physical points
     dtype: Any = np.float32
     quant: Any = None                     # QuantConfig | None (None = f32)
+    coeffs: Any = None                    # (K,) raw coefficients | None
     out: np.ndarray | None = None         # (n,) served u-values
     done: bool = False
     t_submit: float = 0.0
@@ -143,13 +155,18 @@ class PdeServingEngine:
         hooks are enabled; the frozen params are jit constants, so the
         fake-quant folds at AOT-compile time — steady-state cost is one
         program run, identical to f32 serving, with ZERO extra
-        recompiles."""
+        recompiles.  A conditioned solver's program consumes net_dim-wide
+        rows (points + coefficient slots) and is tagged ``c{K}`` in the
+        key — the coefficient VALUES live in the input buffer, so the
+        whole family shares the one program."""
+        solver = self.registry.get(solver_name)
         tag = _quant_tag(quant)
+        ctag = f"c{solver.n_coeffs}" if solver.coeff_spec is not None else ""
         key = (solver_name, np.dtype(dtype).name,
-               *((tag,) if tag else ()), self.slots, self.slot_points)
+               *((tag,) if tag else ()), *((ctag,) if ctag else ()),
+               self.slots, self.slot_points)
         exe = self._programs.get(key)
         if exe is None:
-            solver = self.registry.get(solver_name)
             params, noise = solver.params, solver.noise
             if np.dtype(dtype) != np.float32:
                 # lower-precision serving: cast the frozen params once at
@@ -172,7 +189,7 @@ class PdeServingEngine:
                     dataclasses.replace(model.cfg, quant=quant),
                     problem=model.problem)
             fwd = jax.jit(lambda pts: model.u(params, pts, noise))
-            spec = jax.ShapeDtypeStruct(self._pool_shape(solver.in_dim),
+            spec = jax.ShapeDtypeStruct(self._pool_shape(solver.net_dim),
                                         np.dtype(dtype))
             exe = fwd.lower(spec).compile()
             self._programs[key] = exe
@@ -189,10 +206,10 @@ class PdeServingEngine:
                  else (solver_name,))
         for name in names:
             exe = self._program(name, dtype, quant)
-            in_dim = self.registry.get(name).in_dim
+            width = self.registry.get(name).net_dim
             buf = np.broadcast_to(
                 self._fill_point(name),
-                self._pool_shape(in_dim)).astype(np.dtype(dtype), copy=True)
+                self._pool_shape(width)).astype(np.dtype(dtype), copy=True)
             jax.block_until_ready(exe(jnp.asarray(buf)))
 
     def _fill_point(self, solver_name: str) -> np.ndarray:
@@ -220,6 +237,32 @@ class PdeServingEngine:
         if pts.shape[1] != solver.in_dim:
             raise ValueError(f"solver {req.solver!r} takes in_dim="
                              f"{solver.in_dim} points, got {pts.shape}")
+        # conditioned/unconditioned mismatch is a client error, caught at
+        # submit before any state changes (both directions: a conditioned
+        # solver silently evaluated at garbage slots, or coefficients
+        # silently dropped, would be far worse than the exception)
+        spec = solver.coeff_spec
+        if spec is None:
+            if req.coeffs is not None:
+                raise ValueError(
+                    f"solver {req.solver!r} is not coefficient-conditioned "
+                    "but the request carries coeffs; drop them or query a "
+                    "conditioned solver")
+        else:
+            if req.coeffs is None:
+                raise ValueError(
+                    f"solver {req.solver!r} is coefficient-conditioned on "
+                    f"({', '.join(spec.names)}); pass PointRequest(coeffs="
+                    f"[{', '.join(spec.names)}]) with values in the "
+                    "trained ranges")
+            coeffs = np.asarray(req.coeffs, np.float64).reshape(-1)
+            spec.check_in_range(coeffs)   # arity + trained-range, or raises
+            req.coeffs = coeffs
+            # augment once at submit: everything downstream — cache keys,
+            # slot packing, the net_dim-wide pool — sees plain rows
+            pts = np.concatenate(
+                [pts, np.broadcast_to(coeffs, (pts.shape[0], spec.n))],
+                axis=1)
         req.points = pts
         req.t_submit = time.perf_counter()
         req.out = np.empty(pts.shape[0], np.float64)
@@ -282,12 +325,14 @@ class PdeServingEngine:
             dtype = np.dtype(dtype_name)
             quant = self.active[slot_ids[0]].req.quant
             exe = self._program(solver_name, dtype, quant)
-            in_dim = self.registry.get(solver_name).in_dim
+            width = self.registry.get(solver_name).net_dim
             # full-pool input: fill point everywhere, then overwrite the
-            # group's slots with their chunks (pad-to-slot)
+            # group's slots with their chunks (pad-to-slot; conditioned
+            # rows are already coefficient-augmented from submit, and the
+            # fill point carries in-range sampled coefficients itself)
             buf = np.broadcast_to(
                 self._fill_point(solver_name),
-                (self.slots, self.slot_points, in_dim)).astype(
+                (self.slots, self.slot_points, width)).astype(
                     dtype, copy=True)
             for s in slot_ids:
                 slot = self.active[s]
@@ -295,7 +340,7 @@ class PdeServingEngine:
                                          + slot.count]
                 buf[s, :slot.count] = slot.req.points[idx]
             u = np.asarray(exe(jnp.asarray(
-                buf.reshape(self._pool_shape(in_dim))))).reshape(
+                buf.reshape(self._pool_shape(width))))).reshape(
                     self.slots, self.slot_points)
             self.stats["program_runs"] += 1
             for s in slot_ids:

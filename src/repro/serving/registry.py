@@ -58,6 +58,21 @@ class LoadedSolver:
     def in_dim(self) -> int:
         return self.model.in_dim
 
+    # conditioning surface (DESIGN.md §Parameterized families): the engine
+    # packs net_dim-wide rows and validates request coefficients against
+    # the spec the solver was TRAINED with, not the registry default
+    @property
+    def coeff_spec(self):
+        return self.model.problem.coeff_spec
+
+    @property
+    def n_coeffs(self) -> int:
+        return self.model.problem.n_coeffs
+
+    @property
+    def net_dim(self) -> int:
+        return self.model.problem.net_dim
+
 
 class SolverRegistry:
     """Name-keyed ``LoadedSolver`` store (the PINN analogue of an LM model
@@ -118,7 +133,21 @@ class SolverRegistry:
                     f"checkpoint {directory} predates solver metadata "
                     "(no 'pinn' key in meta.json); pass cfg= explicitly")
             cfg = pinn.config_from_meta(meta["pinn"])
-        model = pinn.TensorPinn(cfg)
+        problem = None
+        if "coeff_spec" in meta:
+            # conditioned checkpoint: rebind the TRAINED coefficient ranges
+            # (possibly --coeff-range overridden at train time) onto a
+            # fresh problem instance — the registry default ranges must
+            # not leak into serving normalization or range validation
+            from repro import pde as pde_lib
+            problem = pde_lib.get_problem(cfg.pde)
+            if problem.coeff_spec is None:
+                raise ValueError(
+                    f"checkpoint meta has coeff_spec but PDE {cfg.pde!r} "
+                    "is not coefficient-conditioned")
+            problem.coeff_spec = pde_lib.CoeffSpec.from_meta(
+                meta["coeff_spec"])
+        model = pinn.TensorPinn(cfg, problem=problem)
         # init gives the restore target's tree structure/shapes; values are
         # overwritten by the checkpoint
         like = model.init(jax.random.PRNGKey(0))

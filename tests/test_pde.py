@@ -26,7 +26,7 @@ EXACT_PDES = [n for n in ALL_PDES if pde.get_problem(n).has_exact_solution]
 
 # CPU-sized model per problem for parity tests (the 100-dim problem pays
 # 2·101+1 stencil inferences per loss, so it gets a smaller batch)
-PARITY_BATCH = {"black-scholes-100d": 4}
+PARITY_BATCH = {"black-scholes-100d": 4, "black-scholes-100d-rs": 4}
 
 
 def _tiny_model(name: str, deriv: str = "fd_fast", **over) -> pinn.TensorPinn:
@@ -62,7 +62,8 @@ def test_collocation_shapes_and_domain():
     for name in ALL_PDES:
         prob = pde.get_problem(name)
         xt = prob.sample_collocation(jax.random.PRNGKey(0), 32)
-        assert xt.shape == (32, prob.in_dim)
+        # conditioned problems sample augmented rows: point + coefficients
+        assert xt.shape == (32, prob.net_dim)
         assert bool(jnp.all(jnp.isfinite(xt)))
 
 

@@ -84,6 +84,102 @@ def test_tt_contract_batched_property(out_dim, in_dim, L, rank, P, batch,
                                atol=1e-4, rtol=1e-4)
 
 
+@settings(deadline=None, max_examples=10)
+@given(
+    lo=st.floats(0.05, 2.0),
+    width=st.floats(0.1, 4.0),
+    n=st.integers(1, 64),
+    dist=st.sampled_from(["uniform", "loguniform"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coeff_sampler_in_range_and_deterministic(lo, width, n, dist, seed):
+    """Property: CoeffSpec.sample stays inside [lo, hi] for any range and
+    distribution, is deterministic under a fixed key, normalizes into
+    [0, 1], and round-trips through meta."""
+    from repro.pde import CoeffSpec
+    hi = lo + width
+    spec = CoeffSpec(("a", "b"), (lo, lo * 2), (hi, hi * 2), dist=dist)
+    key = jax.random.PRNGKey(seed)
+    c = np.asarray(spec.sample(key, n))
+    assert c.shape == (n, 2)
+    assert (c >= np.asarray(spec.lo) - 1e-6).all()
+    assert (c <= np.asarray(spec.hi) + 1e-6).all()
+    np.testing.assert_array_equal(c, np.asarray(spec.sample(key, n)))
+    z = np.asarray(spec.normalize(jnp.asarray(c)))
+    assert (z >= -1e-5).all() and (z <= 1.0 + 1e-5).all()
+    assert CoeffSpec.from_meta(spec.to_meta()) == spec
+    spec.check_in_range(np.asarray(spec.defaults()))   # midpoint in range
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    rows=st.integers(1, 48),
+    cols=st.integers(1, 96),
+    block=st.sampled_from([8, 32, 64]),
+    dtype=st.sampled_from(["int8", "fp8_e4m3"]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 1000),
+)
+def test_fake_quant_idempotent_property(rows, cols, block, dtype, scale,
+                                        seed):
+    """Property: fake_quant is a projection — applying it twice equals
+    applying it once — over random shapes, block sizes, and value scales
+    (the double-hook safety ops.py relies on)."""
+    from repro.kernels.quant import QuantConfig, fake_quant
+    qcfg = QuantConfig(enabled=True, dtype=dtype, block=block)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * scale
+    once = fake_quant(w, qcfg)
+    twice = fake_quant(once, qcfg)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    shape=st.sampled_from([(7,), (3, 5), (2, 4, 8), (40,)]),
+    bits=st.integers(2, 12),
+    seed=st.integers(0, 1000),
+)
+def test_quantize_phases_idempotent_property(shape, bits, seed):
+    """Property: snapping phases to the 2π/2^bits DAC grid is idempotent
+    and lands on the grid, for any tensor rank and resolution."""
+    from repro.kernels.quant import quantize_phases
+    ph = jax.random.uniform(jax.random.PRNGKey(seed), shape,
+                            minval=-10.0, maxval=10.0)
+    once = quantize_phases(ph, bits)
+    np.testing.assert_array_equal(np.asarray(once),
+                                  np.asarray(quantize_phases(once, bits)))
+    lsb = 2.0 * np.pi / (1 << bits)
+    steps = np.asarray(once) / lsb
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    P=st.integers(1, 4),
+    C=st.integers(1, 5),
+    batch=st.integers(1, 12),
+    shared_x=st.booleans(),
+)
+def test_tt_contract_multi_axis_property(P, C, batch, shared_x):
+    """Property: extra batch axes (perturbations x coefficients x points)
+    flatten through the stacked chain and reshape back — equal to the
+    flattened 2D call, for shared and per-P inputs, INCLUDING the ambiguous
+    C == P case that the explicit shared_x flag disambiguates."""
+    spec = tt.auto_factorize(16, 32, L=2, max_rank=2)
+    keys = jax.random.split(jax.random.PRNGKey(3), P)
+    stacks = tuple(jnp.stack([tt.tt_init(k, spec)[i] for k in keys])
+                   for i in range(spec.L))
+    shape = ((C, batch, 32) if shared_x else (P, C, batch, 32))
+    x = jax.random.normal(jax.random.PRNGKey(4), shape)
+    y = ref.tt_contract_batched_ref(x, stacks, spec, shared_x=shared_x)
+    assert y.shape == (P, C, batch, 16)
+    flat = x.reshape(-1, 32) if shared_x else x.reshape(P, -1, 32)
+    y_flat = ref.tt_contract_batched_ref(flat, stacks, spec,
+                                         shared_x=shared_x)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(y_flat.reshape(y.shape)))
+
+
 @settings(deadline=None, max_examples=15)
 @given(
     h=st.sampled_from([2, 4, 8]),

@@ -428,6 +428,142 @@ def test_cache_counters_surface_in_engine_stats():
     assert st["cache_evictions"] == eng.cache.evictions == 0
 
 
+# ---------------------------------------- coefficient-conditioned serving
+
+def _cond_registry(name="fam", pde="heat-10d-kappa", mode="tt"):
+    reg = SolverRegistry()
+    cfg = pinn.PINNConfig(hidden=16, mode=mode, tt_rank=2, tt_L=3, pde=pde)
+    reg.register_fresh(name, cfg, seed=0)
+    return reg
+
+
+def _phys_query(reg, name, n, seed=0):
+    """Physical points only — what a conditioned client sends (the engine
+    appends the request's coefficient vector itself)."""
+    s = reg.get(name)
+    return np.asarray(s.problem.sample_collocation(
+        jax.random.PRNGKey(seed), n), np.float32)[:, :s.in_dim]
+
+
+def test_conditioned_solver_rejects_missing_coeffs():
+    """A conditioned checkpoint queried without coefficients is a hard
+    submit-time error naming the expected coefficients — NOT a silent
+    evaluation at whatever the padding slots happen to hold."""
+    reg = _cond_registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    with pytest.raises(ValueError, match="kappa"):
+        eng.submit(PointRequest("fam", _phys_query(reg, "fam", 4)))
+    # nothing was enqueued or compiled by the failed submit
+    assert len(eng.queue) == 0 and eng.stats["compiles"] == 0
+
+
+def test_unconditioned_solver_rejects_coeffs():
+    """The reverse direction: coefficients on an unconditioned solver are
+    rejected, never silently dropped."""
+    reg = _registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    with pytest.raises(ValueError, match="not coefficient-conditioned"):
+        eng.submit(PointRequest("heat", _query(reg, "heat", 4),
+                                coeffs=[1.0]))
+    assert len(eng.queue) == 0
+
+
+def test_conditioned_out_of_range_and_arity_rejected():
+    """Coefficient values outside the TRAINED range (the model would be
+    extrapolating) and wrong-arity vectors both fail at submit."""
+    reg = _cond_registry()                   # kappa trained on [0.5, 2.0]
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    pts = _phys_query(reg, "fam", 4)
+    with pytest.raises(ValueError, match="outside trained range"):
+        eng.submit(PointRequest("fam", pts, coeffs=[5.0]))
+    with pytest.raises(ValueError, match="outside trained range"):
+        eng.submit(PointRequest("fam", pts, coeffs=[0.499]))
+    with pytest.raises(ValueError, match="expected 1 coefficient"):
+        eng.submit(PointRequest("fam", pts, coeffs=[1.0, 2.0]))
+    # boundary values are inside the family
+    r = eng.submit(PointRequest("fam", pts, coeffs=[0.5]))
+    eng.run()
+    assert r.done
+
+
+def test_conditioned_family_one_program_bit_identical():
+    """The family contract: ONE AOT program (tagged c{K}) serves every
+    coefficient instance, each bit-identical to the direct net_dim-wide
+    forward, with zero steady-state recompiles."""
+    reg = _cond_registry()
+    s = reg.get("fam")
+    eng = PdeServingEngine(reg, slots=2, slot_points=16, enable_cache=False)
+    pts = _phys_query(reg, "fam", 20, seed=3)
+    reqs = [eng.submit(PointRequest("fam", pts, coeffs=[k]))
+            for k in (0.6, 1.0, 1.9)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    for k, r in zip((0.6, 1.0, 1.9), reqs):
+        aug = np.concatenate(
+            [pts, np.full((len(pts), 1), k, np.float32)], axis=1)
+        np.testing.assert_array_equal(r.out.astype(np.float32),
+                                      _direct(reg, "fam", aug))
+    # one program for the whole family, coefficient values never in the key
+    assert eng.stats["compiles"] == 1
+    assert eng.serving_stats()["programs"] == ["fam|float32|c1|2|16"]
+    # different coefficients give different fields (conditioning bites)
+    assert (reqs[0].out != reqs[2].out).any()
+    for k in (0.55, 0.77, 1.23):             # fresh instances: no recompile
+        eng.submit(PointRequest("fam", pts, coeffs=[k]))
+    eng.run()
+    assert eng.stats["compiles"] == 1
+
+
+def test_cache_isolates_coefficient_instances():
+    """Same physical points under different coefficients must never
+    cross-hit: the coefficient slots are part of the cached row."""
+    reg = _cond_registry()
+    eng = PdeServingEngine(reg, slots=2, slot_points=16)
+    pts = _phys_query(reg, "fam", 10, seed=5)
+    eng.submit(PointRequest("fam", pts, coeffs=[0.7]))
+    eng.run()
+    hits = eng.cache.stats()["hits"]
+    r2 = eng.submit(PointRequest("fam", pts, coeffs=[1.7]))  # same points!
+    eng.run()
+    assert r2.done and eng.cache.stats()["hits"] == hits
+    # exact (points, coeffs) resubmit: full hit at submit, same bits
+    r3 = eng.submit(PointRequest("fam", pts, coeffs=[1.7]))
+    assert r3.done and eng.cache.stats()["hits"] == hits + 10
+    np.testing.assert_array_equal(r2.out, r3.out)
+
+
+def test_conditioned_checkpoint_roundtrip_restores_trained_ranges(tmp_path):
+    """A conditioned checkpoint is self-describing: the registry restores
+    the TRAINED coefficient ranges (here --coeff-range-style overridden,
+    narrower than the registry default) and enforces them at serve time."""
+    from repro import pde as pde_lib
+    cfg = pinn.PINNConfig(hidden=16, mode="tt", tt_rank=2, tt_L=3,
+                          pde="heat-10d-kappa")
+    problem = pde_lib.get_problem("heat-10d-kappa")
+    problem.coeff_spec = problem.coeff_spec.with_ranges(
+        {"kappa": (0.8, 1.2)})              # narrower than default [0.5, 2]
+    model = pinn.TensorPinn(cfg, problem=problem)
+    params = model.init(jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path, 7, {"params": params, "zo": {}},
+                    {"pinn": pinn.config_to_meta(cfg), "pde": problem.name,
+                     "seed": 0, "coeff_spec": problem.coeff_spec.to_meta()})
+    reg = SolverRegistry()
+    s = reg.load_checkpoint("fam", tmp_path)
+    assert s.coeff_spec.names == ("kappa",)
+    assert s.coeff_spec.lo == (0.8,) and s.coeff_spec.hi == (1.2,)
+    assert s.net_dim == s.in_dim + 1
+    eng = PdeServingEngine(reg, slots=2, slot_points=8)
+    pts = _phys_query(reg, "fam", 5, seed=1)
+    with pytest.raises(ValueError, match="outside trained range"):
+        # in the registry default range but outside the trained one
+        eng.submit(PointRequest("fam", pts, coeffs=[1.5]))
+    req = eng.submit(PointRequest("fam", pts, coeffs=[1.1]))
+    eng.run()
+    aug = np.concatenate([pts, np.full((5, 1), 1.1, np.float32)], axis=1)
+    np.testing.assert_array_equal(req.out.astype(np.float32),
+                                  _direct(reg, "fam", aug))
+
+
 def test_lm_engine_queue_is_deque():
     """The O(n) list.pop(0) admission regression guard for BOTH engines."""
     from collections import deque
