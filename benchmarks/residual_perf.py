@@ -1,0 +1,283 @@
+"""Spectral vs FD residual estimator: the BP-free inference bill
+(DESIGN.md §Residual-estimators).
+
+The fd estimator prices every loss evaluation at ``(2A+1)·B`` inferences
+(A active axes, B collocation points) — 2300/loss for the 10-dim workloads
+at the paper's batch 100.  The spectral estimator prices it at
+``B·(A·(M−1)+1)`` for an M-point line grid per axis, and its FFT-exact
+derivatives hold accuracy at a far smaller anchor batch.  Two arms per
+workload (heat-10d, hjb-10d), same ZO-signSGD budget:
+
+  * ``fd``       — the repo's fd hot path (incremental rank-1 stencil,
+                   fused stacked evaluator), batch 100.
+  * ``spectral`` — line-grid rows through the SAME fused stacked
+                   evaluator, detrend+window periodization with the
+                   problem's analytic carrier, batch 9 at M=8.
+
+Gates (--ci):
+
+  * **inference bill** — spectral spends ≥3x fewer inferences per loss
+    evaluation than fd on every workload (static count; 2300 vs 702 at
+    the shipped sizes = 3.28x).
+  * **matched accuracy** — spectral's closed-form validation MSE ends
+    ≤1.1x the fd arm's after the same number of ZO steps.
+  * **wall clock** — the full jitted ZO step (N+1 stacked loss evals) is
+    measured interleaved for both arms; the spectral step must not be
+    slower than fd (the bill reduction is real time, not just a count).
+  * **fd/stein off-path** — the estimator dispatch seam this PR added
+    (``cfg.deriv == "auto"`` → ``problem.estimator``, inert
+    ``spectral_points``) is bit-identical for fd, fd_fast and stein:
+    identical losses and stacked losses to the explicit pre-PR configs.
+
+Emits ``BENCH_residual_perf.json`` (archived by CI).
+
+    PYTHONPATH=src python benchmarks/residual_perf.py --ci
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pinn, spectral, stein, zoo
+from repro.pde.heat import HeatProblem
+
+try:
+    from benchmarks.zo_step import _time_pair
+except ImportError:  # invoked as `python benchmarks/residual_perf.py`
+    from zo_step import _time_pair
+
+WORKLOADS = ("heat-10d", "hjb-10d")
+INFERENCE_RATIO_GATE = 3.0   # spectral must spend ≥3x fewer inferences/loss
+MSE_RATIO_GATE = 1.1         # ...at ≤1.1x the fd arm's validation MSE
+
+# per-arm (deriv, batch, spectral_points); fd batch is the paper config,
+# the spectral sizes give 9·(11·7+1) = 702 inferences/loss vs fd's
+# 23·100 = 2300 (ratio 3.28x) on the A=11 (10 space + time) workloads
+ARMS = {
+    "fd": {"deriv": "fd_fast", "batch": 100, "spectral_points": None},
+    "spectral": {"deriv": "spectral", "batch": 9, "spectral_points": 8},
+}
+
+
+def _inferences_per_loss(deriv: str, batch: int, n_active: int,
+                         points: int | None) -> int:
+    if deriv == "spectral":
+        return spectral.num_spectral_inferences(batch, n_active, points)
+    return stein.num_fd_inferences(n_active) * batch
+
+
+def _make_model(pde: str, arm: dict, hidden: int):
+    cfg = pinn.PINNConfig(hidden=hidden, mode="tt", tt_rank=2, tt_L=3,
+                          pde=pde, deriv=arm["deriv"],
+                          spectral_points=arm["spectral_points"])
+    return pinn.TensorPinn(cfg)
+
+
+def _make_step(model, scfg, mask):
+    @jax.jit
+    def step(params, state, xt, lr_t):
+        lf = lambda p: pinn.residual_loss(model, p, xt)
+        blf = lambda sp: pinn.residual_losses_stacked(model, sp, xt)
+        return zoo.zo_signsgd_step(lf, params, state, lr=lr_t, cfg=scfg,
+                                   batched_loss_fn=blf, trainable_mask=mask)
+    return step
+
+
+def train_arm(pde: str, arm: dict, hidden: int, epochs: int,
+              num_samples: int, lr: float, seed: int) -> dict:
+    """One on-chip ZO-signSGD run (table1_hjb budget shape: cosine-free
+    stepped lr decay, trainable-mask-gated updates) → final val MSE plus
+    the jitted step fn and its fixed timing batch for `_time_pair`."""
+    t0 = time.time()
+    model = _make_model(pde, arm, hidden)
+    problem = model.problem
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    mask = model.trainable_mask(params)
+    scfg = zoo.SPSAConfig(num_samples=num_samples, mu=0.01)
+    state = zoo.ZOState.create(seed + 1)
+    step = _make_step(model, scfg, mask)
+
+    for i in range(epochs):
+        xt = problem.sample_collocation(jax.random.fold_in(key, i),
+                                        arm["batch"])
+        lr_t = lr * (0.5 ** (i / max(epochs // 3, 1)))
+        params, state, _ = step(params, state, xt, lr_t)
+
+    val = problem.sample_collocation(jax.random.PRNGKey(1234), 1000)
+    val_mse = float(pinn.validation_mse(model, params, val))
+    xt_fix = problem.sample_collocation(jax.random.fold_in(key, 10_001),
+                                        arm["batch"])
+    timed = lambda: step(params, state, xt_fix, lr)[2]
+    return {
+        "val_mse": val_mse,
+        "inferences_per_loss": _inferences_per_loss(
+            arm["deriv"], arm["batch"], model.in_dim,
+            arm["spectral_points"]),
+        "seconds": round(time.time() - t0, 1),
+        "_timed": timed,
+    }
+
+
+def bench_workload(pde: str, hidden: int, epochs: int, num_samples: int,
+                   lr: float, repeats: int, seed: int) -> dict:
+    res = {name: train_arm(pde, arm, hidden, epochs, num_samples, lr, seed)
+           for name, arm in ARMS.items()}
+    fd_ms, sp_ms = _time_pair(res["fd"].pop("_timed"),
+                              res["spectral"].pop("_timed"), repeats)
+    res["fd"]["zo_step_ms"] = round(fd_ms, 2)
+    res["spectral"]["zo_step_ms"] = round(sp_ms, 2)
+    fd, sp = res["fd"], res["spectral"]
+    return {
+        "pde": pde,
+        **{f"{n}_{k}": v for n, r in res.items() for k, v in r.items()},
+        "inference_ratio": round(
+            fd["inferences_per_loss"] / sp["inferences_per_loss"], 2),
+        "mse_ratio": round(sp["val_mse"] / max(fd["val_mse"], 1e-12), 3),
+        "step_speedup": round(fd_ms / sp_ms, 2),
+    }
+
+
+def check_off_path(batch: int = 16, hidden: int = 32, seed: int = 0) -> dict:
+    """Bit-identity of the fd/stein paths through the estimator dispatch
+    seam: "auto" resolution and the inert ``spectral_points`` knob must
+    not perturb a single bit of the pre-PR configurations."""
+    base = pinn.PINNConfig(hidden=hidden, mode="tt", tt_rank=2, tt_L=3,
+                           pde="heat-10d", deriv="fd")
+    m_fd = pinn.TensorPinn(base)
+    key = jax.random.PRNGKey(seed)
+    params = m_fd.init(key)
+    xt = m_fd.problem.sample_collocation(jax.random.fold_in(key, 1), batch)
+    sp = jax.tree.map(lambda l: jnp.broadcast_to(l, (3,) + l.shape), params)
+
+    # 1) deriv="auto" on a problem whose estimator is "fd" (every shipped
+    #    problem) resolves to the same branch, bit for bit
+    m_auto = pinn.TensorPinn(dataclasses.replace(base, deriv="auto"))
+    eq = lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b)))
+    fd_auto = (
+        eq(pinn.residual_loss(m_fd, params, xt),
+           pinn.residual_loss(m_auto, params, xt))
+        and eq(pinn.residual_losses_stacked(m_fd, sp, xt),
+               pinn.residual_losses_stacked(m_auto, sp, xt)))
+
+    # 2) a set spectral_points is inert for the fd_fast hot path
+    m_fast = pinn.TensorPinn(dataclasses.replace(base, deriv="fd_fast"))
+    m_fast_sp = pinn.TensorPinn(dataclasses.replace(
+        base, deriv="fd_fast", spectral_points=8))
+    fast_inert = (
+        eq(pinn.residual_loss(m_fast, params, xt),
+           pinn.residual_loss(m_fast_sp, params, xt))
+        and eq(pinn.residual_losses_stacked(m_fast, sp, xt),
+               pinn.residual_losses_stacked(m_fast_sp, sp, xt)))
+
+    # 3) stein: explicit deriv="stein" vs "auto" deferring to a problem
+    #    instance carrying estimator="stein"
+    p_stein = HeatProblem(space_dim=10)
+    p_stein.estimator = "stein"
+    m_stein = pinn.TensorPinn(dataclasses.replace(base, deriv="stein"))
+    m_stein_auto = pinn.TensorPinn(dataclasses.replace(base, deriv="auto"),
+                                   problem=p_stein)
+    k = jax.random.fold_in(key, 2)
+    stein_auto = eq(pinn.residual_loss(m_stein, params, xt, key=k),
+                    pinn.residual_loss(m_stein_auto, params, xt, key=k))
+
+    return {
+        "fd_auto_bit_identical": fd_auto,
+        "fd_fast_spectral_points_inert": fast_inert,
+        "stein_auto_bit_identical": stein_auto,
+    }
+
+
+def run(pdes=WORKLOADS, hidden: int = 48, epochs: int = 300,
+        num_samples: int = 10, lr: float = 2e-3, repeats: int = 5,
+        seed: int = 0) -> dict:
+    return {
+        "config": {"pdes": list(pdes), "hidden": hidden, "epochs": epochs,
+                   "num_samples": num_samples, "lr": lr, "seed": seed,
+                   "arms": {n: {k: v for k, v in a.items()}
+                            for n, a in ARMS.items()},
+                   "inference_ratio_gate": INFERENCE_RATIO_GATE,
+                   "mse_ratio_gate": MSE_RATIO_GATE,
+                   "backend": jax.default_backend()},
+        "rows": [bench_workload(p, hidden, epochs, num_samples, lr,
+                                repeats, seed) for p in pdes],
+        "off_path": check_off_path(seed=seed),
+    }
+
+
+def summarize(result: dict) -> list:
+    """Rows for benchmarks/run.py's CSV."""
+    out = []
+    for r in result["rows"]:
+        out.append({
+            "name": f"residual_perf/{r['pde']}",
+            "us_per_call": round(r["spectral_zo_step_ms"] * 1e3, 1),
+            "derived": (f"{r['inference_ratio']}x fewer inferences/loss "
+                        f"({r['fd_inferences_per_loss']} -> "
+                        f"{r['spectral_inferences_per_loss']}), "
+                        f"mse_ratio={r['mse_ratio']}, "
+                        f"step_speedup={r['step_speedup']}x"),
+        })
+    return out
+
+
+def assert_gates(result: dict) -> None:
+    off = result["off_path"]
+    assert all(off.values()), f"fd/stein off-path invariant broken: {off}"
+    for r in result["rows"]:
+        assert r["inference_ratio"] >= INFERENCE_RATIO_GATE, (
+            f"{r['pde']}: spectral spends only {r['inference_ratio']}x "
+            f"fewer inferences/loss (gate {INFERENCE_RATIO_GATE}x)")
+        assert r["mse_ratio"] <= MSE_RATIO_GATE, (
+            f"{r['pde']}: spectral val MSE {r['spectral_val_mse']:.3e} is "
+            f"{r['mse_ratio']}x the fd arm's {r['fd_val_mse']:.3e} "
+            f"(gate {MSE_RATIO_GATE}x)")
+        assert r["step_speedup"] >= 1.0, (
+            f"{r['pde']}: spectral ZO step slower than fd "
+            f"({r['spectral_zo_step_ms']}ms vs {r['fd_zo_step_ms']}ms)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="assert the bill/accuracy/off-path gates")
+    ap.add_argument("--out", default="BENCH_residual_perf.json")
+    ap.add_argument("--hidden", type=int, default=48)
+    ap.add_argument("--epochs", type=int, default=300)
+    ap.add_argument("--num-samples", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pdes", default=None,
+                    help=f"comma-separated subset of {list(WORKLOADS)}")
+    args = ap.parse_args(argv)
+    pdes = tuple(args.pdes.split(",")) if args.pdes else WORKLOADS
+    result = run(pdes=pdes, hidden=args.hidden, epochs=args.epochs,
+                 num_samples=args.num_samples, lr=args.lr,
+                 repeats=args.repeats, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for r in result["rows"]:
+        print(f"[{r['pde']}] fd: {r['fd_inferences_per_loss']} inf/loss, "
+              f"mse={r['fd_val_mse']:.3e}, {r['fd_zo_step_ms']}ms | "
+              f"spectral: {r['spectral_inferences_per_loss']} inf/loss, "
+              f"mse={r['spectral_val_mse']:.3e}, "
+              f"{r['spectral_zo_step_ms']}ms | "
+              f"bill {r['inference_ratio']}x, mse {r['mse_ratio']}x, "
+              f"step {r['step_speedup']}x")
+    print(f"[off-path] {result['off_path']}")
+    if args.ci:
+        assert_gates(result)
+        print("CI gates passed")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

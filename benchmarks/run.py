@@ -22,6 +22,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * coeff_family/* — one coefficient-conditioned checkpoint vs dedicated
                     per-coefficient checkpoints: closed-form val MSE per
                     held-out coefficient (BENCH_coeff_family.json)
+  * residual_perf/* — spectral vs fd residual estimator: inferences per
+                    loss evaluation, matched-MSE check and jitted ZO-step
+                    wall clock (BENCH_residual_perf.json)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
                     fraction; run launch/dryrun.py first to populate)
 """
@@ -121,6 +124,15 @@ def bench_quantized(rows):
         quantized.run(modes=("tt",), epochs=20))
 
 
+def bench_residual_perf(rows):
+    """Spectral vs fd estimator at a reduced budget (heat only —
+    benchmarks/residual_perf.py standalone runs both workloads with the
+    off-path bit-identity and MSE-ratio gate checks)."""
+    from benchmarks import residual_perf
+    rows += residual_perf.summarize(
+        residual_perf.run(pdes=("heat-10d",), epochs=150, repeats=3))
+
+
 def bench_coeff_family(rows):
     """Conditioned-family comparison at a reduced budget (hjb only —
     benchmarks/coeff_family.py standalone runs all three families with
@@ -153,6 +165,9 @@ def main() -> None:
     ap.add_argument("--skip-coeff-family", action="store_true",
                     help="skip the conditioned-family comparison (~1 min "
                          "at the reduced hjb-only budget)")
+    ap.add_argument("--skip-residual-perf", action="store_true",
+                    help="skip the spectral-vs-fd estimator comparison "
+                         "(~2 min at the reduced heat-only budget)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
@@ -171,6 +186,8 @@ def main() -> None:
         bench_quantized(rows)
     if not args.skip_coeff_family:
         bench_coeff_family(rows)
+    if not args.skip_residual_perf:
+        bench_residual_perf(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import pde as pde_lib
-from repro.core import fastmath, photonic, stein, tt
+from repro.core import fastmath, photonic, spectral as spectral_lib, stein, tt
 from repro.kernels import quant as quant_lib
 
 __all__ = ["PINNConfig", "TensorPinn", "sample_collocation",
@@ -63,9 +63,18 @@ class PINNConfig:
     #                               truncation sweet spot); an explicit
     #                               value always wins, even one equal to a
     #                               problem default
-    deriv: str = "fd"           # fd | fd_fast | stein
+    deriv: str = "fd"           # fd | fd_fast | stein | spectral | auto
+    #                             ("auto" defers to the bound problem's
+    #                             ``estimator`` attribute; every shipped
+    #                             problem says "fd", so auto-resolution is
+    #                             bit-identical to the historical default)
     stein_sigma: float = 5e-2
     stein_samples: int = 32
+    spectral_points: int | None = None  # line-grid size M for the spectral
+    #                             estimator; None → the bound problem's
+    #                             ``spectral_points`` (extent and
+    #                             periodization always come from the
+    #                             problem — they are domain facts)
     use_fused_kernel: bool = False  # route TT matvecs through the Pallas
     #                                 kernel dispatcher (repro.kernels.ops):
     #                                 fused VMEM chain on TPU, jnp ref on CPU
@@ -632,6 +641,36 @@ def _boundary_mse(u_b: jax.Array, ub_target: jax.Array) -> jax.Array:
     return jnp.mean((u_b - ub_target) ** 2, axis=-1)
 
 
+def _resolve_deriv(cfg: PINNConfig, problem: pde_lib.PDEProblem) -> str:
+    """The estimator dispatch seam (DESIGN.md §Residual-estimators):
+    ``cfg.deriv == "auto"`` defers to the problem's ``estimator``
+    attribute; an explicit config value always wins."""
+    return problem.estimator if cfg.deriv == "auto" else cfg.deriv
+
+
+def _spectral_grid(model: "TensorPinn") -> tuple:
+    """(M, extent, periodization) for the bound problem — M from the
+    config when set, the domain facts always from the problem."""
+    problem = model.problem
+    M = model.cfg.spectral_points or problem.spectral_points
+    return M, problem.spectral_extent, problem.spectral_periodization
+
+
+def _spectral_loss_terms(model: "TensorPinn", vals: jax.Array,
+                         rows: jax.Array, xt: jax.Array) -> jax.Array:
+    """Residual loss(es) from u-values over the spectral line rows:
+    vals (..., R) → mean-squared residual with any leading axes (the
+    stacked path feeds the (P, R) perturbation stack) reduced only over
+    the anchor batch."""
+    problem = model.problem
+    M, extent, periodization = _spectral_grid(model)
+    est = spectral_lib.estimate_from_line_vals(
+        vals, xt, model.in_dim, M, extent, periodization,
+        carrier=problem.spectral_carrier(rows, xt))
+    r = problem.residual(est, xt)
+    return jnp.mean(r * r, axis=-1)
+
+
 def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
                   noise: dict | None = None,
                   key: jax.Array | None = None,
@@ -639,21 +678,28 @@ def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
     """BP-free PDE loss (paper Eq. 4): L_r, plus λ·L_b when the problem has
     a boundary term and a boundary batch ``bc = (xb, ub_target)`` is given.
 
-    Derivatives are estimated inference-only (FD or Stein per ``cfg.deriv``);
-    the bound ``PDEProblem`` reduces the estimate to a pointwise residual.
+    Derivatives are estimated inference-only (FD, Stein or spectral per
+    ``cfg.deriv``, "auto" deferring to ``problem.estimator``); the bound
+    ``PDEProblem`` reduces the estimate to a pointwise residual.
     TONN densification is hoisted here: ONE mesh→core pass per loss
     evaluation, shared by every stencil inference (DESIGN.md §Perf).
     """
     cfg = model.cfg
     problem = model.problem
+    deriv = _resolve_deriv(cfg, problem)
     params, noise = model.prepare_params(params, noise)
-    if cfg.deriv == "fd_fast":
+    if deriv == "fd_fast":
         # incremental rank-1 FD forward: layer 1 computed once (§Perf cell 3)
         vals = model.fd_u_stencil(params, xt, model.fd_step, noise)
         loss = _loss_from_u_stencil(problem, vals, model.fd_step, xt)
+    elif deriv == "spectral":
+        M, extent, _ = _spectral_grid(model)
+        rows = spectral_lib.spectral_line_rows(xt, model.in_dim, M, extent)
+        loss = _spectral_loss_terms(
+            model, model.u(params, rows, noise), rows, xt)
     else:
         f = lambda pts: model.u(params, pts, noise)
-        if cfg.deriv == "fd":
+        if deriv == "fd":
             est = stein.fd_estimate(f, xt, h=model.fd_step,
                                     n_active=model.in_dim)
         else:
@@ -677,21 +723,23 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
     """The ZO hot path: residual losses of P stacked parameter sets (leading
     axis on every leaf) over ONE shared collocation batch → (P,) losses.
 
-    For dense/tt/tonn/onn with FD derivatives this runs as a small number
-    of batched programs (densify-once via the batched mesh engine, stacked
-    TT contraction via ``tt_linear_batched``, stacked mesh matvecs via
-    ``PhotonicMatrix.apply_stacked`` in onn mode, one shared stencil)
-    instead of P independent forwards.  Other mode/estimator combinations
-    (Stein derivatives) fall back to a vmap of the scalar loss — correct
-    everywhere, fused where it matters.  The fallback SPLITS ``key`` per
-    perturbation, so stochastic estimators (Stein) draw independent noise
-    for each stacked entry: stacked entry i equals
+    For dense/tt/tonn/onn with FD or spectral derivatives this runs as a
+    small number of batched programs (densify-once via the batched mesh
+    engine, stacked TT contraction via ``tt_linear_batched``, stacked mesh
+    matvecs via ``PhotonicMatrix.apply_stacked`` in onn mode, one shared
+    stencil — or one shared set of spectral line rows, FFT'd per
+    perturbation after the single stacked forward).  Other mode/estimator
+    combinations (Stein derivatives) fall back to a vmap of the scalar
+    loss — correct everywhere, fused where it matters.  The fallback
+    SPLITS ``key`` per perturbation, so stochastic estimators (Stein)
+    draw independent noise for each stacked entry: stacked entry i equals
     ``residual_loss(model, params_i, xt, noise, jax.random.split(key, P)[i])``.
     """
     cfg = model.cfg
     problem = model.problem
+    deriv = _resolve_deriv(cfg, problem)
     if cfg.mode not in ("dense", "tt", "tonn", "onn") or \
-            cfg.deriv not in ("fd", "fd_fast"):
+            deriv not in ("fd", "fd_fast", "spectral"):
         if key is None:
             return jax.vmap(
                 lambda p: residual_loss(model, p, xt, noise, None, bc)
@@ -705,17 +753,23 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
     # tonn bakes the (shared-chip) hardware noise into the densified cores;
     # onn applies it in the stacked mesh matvecs
     eff_noise = noise if cfg.mode == "onn" else None
-    h = model.fd_step
-    if cfg.deriv == "fd_fast":
-        vals = model.fd_u_stencil_stacked(prepared, xt, h, eff_noise)
+    if deriv == "spectral":
+        M, extent, _ = _spectral_grid(model)
+        rows = spectral_lib.spectral_line_rows(xt, model.in_dim, M, extent)
+        vals = model.u_stacked(prepared, rows, eff_noise)     # (P, R)
+        losses = _spectral_loss_terms(model, vals, rows, xt)  # (P,)
     else:
-        B, D = xt.shape
-        A = model.in_dim  # coefficient slots are never differentiated
-        pts = pde_lib.fd_stencil_points(xt, h, A)
-        vals = model.u_stacked(prepared, pts.reshape(-1, D), eff_noise)
-        vals = vals.reshape(vals.shape[0], 2 * A + 1, B)
-    losses = jax.vmap(
-        lambda v: _loss_from_u_stencil(problem, v, h, xt))(vals)
+        h = model.fd_step
+        if deriv == "fd_fast":
+            vals = model.fd_u_stencil_stacked(prepared, xt, h, eff_noise)
+        else:
+            B, D = xt.shape
+            A = model.in_dim  # coefficient slots are never differentiated
+            pts = pde_lib.fd_stencil_points(xt, h, A)
+            vals = model.u_stacked(prepared, pts.reshape(-1, D), eff_noise)
+            vals = vals.reshape(vals.shape[0], 2 * A + 1, B)
+        losses = jax.vmap(
+            lambda v: _loss_from_u_stencil(problem, v, h, xt))(vals)
     if bc is not None:
         xb, ub = bc
         losses = losses + problem.bc_weight * _boundary_mse(

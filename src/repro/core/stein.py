@@ -38,19 +38,35 @@ __all__ = ["DerivativeEstimate", "fd_estimate", "stein_estimate",
 
 @dataclasses.dataclass
 class DerivativeEstimate:
-    """u, ∇u and the diagonal of the Hessian at each point (B, D)."""
+    """u, ∇u and the Hessian diagonal at each collocation point.
+
+    Width contract (unified across estimators): for (B, D) input rows with
+    A = ``n_active`` differentiated coordinates (A = D when unconditioned),
+    every estimator — ``fd_estimate``, ``stein_estimate`` and
+    ``spectral_estimate`` (repro.core.spectral) — returns ``grad`` and
+    ``hess_diag`` of shape **(B, A)**: derivatives with respect to the
+    active coordinates only.  Trailing coefficient-slot columns are never
+    differentiated and are NOT materialized (stein's former (B, D)
+    zero-padded leaves are sliced to (B, A); the padding columns were
+    exact zeros, so downstream residual sums are unchanged).
+    """
     u: jax.Array          # (B,)
-    grad: jax.Array       # (B, D)
-    hess_diag: jax.Array  # (B, D)
+    grad: jax.Array       # (B, A)
+    hess_diag: jax.Array  # (B, A)
 
     def laplacian(self, dims: slice | None = None) -> jax.Array:
         h = self.hess_diag if dims is None else self.hess_diag[:, dims]
         return jnp.sum(h, axis=-1)
 
 
-def num_fd_inferences(d: int) -> int:
-    """Perturbed inferences per loss evaluation (paper: 42 for d=21)."""
-    return 2 * d
+def num_fd_inferences(d: int, n_active: int | None = None) -> int:
+    """Stacked rows per ``fd_estimate`` loss evaluation: the base batch
+    plus 2A coordinate perturbations, i.e. **2A + 1** with
+    A = ``n_active`` (A = d when None).  The paper's "42 inferences for
+    d = 21" counts only the *perturbed* batches — recover it as
+    ``num_fd_inferences(21) - 1``."""
+    a = d if n_active is None else n_active
+    return 2 * a + 1
 
 
 def fd_estimate(f: Callable[[jax.Array], jax.Array], x: jax.Array,
@@ -93,9 +109,10 @@ def stein_estimate(f: Callable[[jax.Array], jax.Array], x: jax.Array,
 
     ``n_active`` zeroes the Gaussian directions beyond the first A
     coordinates (coefficient-conditioned rows: the trailing coefficient
-    slots are held fixed, so the smoothing never mixes scenarios); the
-    returned leaves keep full column width — the extra columns are exact
-    zeros.  A = D when None (legacy path untouched).
+    slots are held fixed, so the smoothing never mixes scenarios).  The
+    returned leaves are (B, A) — the ``DerivativeEstimate`` width
+    contract; the dropped columns were exact zeros, so residual sums over
+    them are unchanged.  A = D when None (legacy path untouched).
     """
     B, D = x.shape
     S = num_samples
@@ -119,4 +136,5 @@ def stein_estimate(f: Callable[[jax.Array], jax.Array], x: jax.Array,
     c2 = (up - 2.0 * u0[None] + um) / (sigma * sigma)   # (S, B)
     tr_term = jnp.mean(c2, axis=0)                      # ≈ tr(H)
     hess = (jnp.einsum("sb,sbd->bd", c2, z * z) / S - tr_term[:, None]) / 2.0
-    return DerivativeEstimate(u=u0, grad=grad, hess_diag=hess)
+    A = D if n_active is None else n_active
+    return DerivativeEstimate(u=u0, grad=grad[:, :A], hess_diag=hess[:, :A])

@@ -112,3 +112,36 @@ def pde_collocation_iterator(n: int, space_dim: int = 20, seed: int = 0,
     while True:
         yield sample(_step_key(seed, step))
         step += 1
+
+
+def pde_line_grid_iterator(n_anchors: int, seed: int = 0,
+                           start_step: int = 0,
+                           pde: str | None = None, problem=None,
+                           points: int | None = None
+                           ) -> Iterator[tuple]:
+    """Counter-based collocation stream for the spectral estimator:
+    yields ``(anchors, rows)`` per step — ``anchors`` (B, net_dim) drawn
+    by the problem's own sampler (same key derivation as
+    ``pde_collocation_iterator``, so an anchor stream at batch B matches
+    the fd stream's points exactly), ``rows`` the deduped per-axis line
+    grids ``spectral_line_rows`` builds through them.
+
+    The loss paths rebuild ``rows`` from ``anchors`` internally (they are
+    a pure function of the anchors), so trainers feed only ``anchors`` to
+    ``residual_losses_stacked``; the materialized ``rows`` exist for
+    consumers that meter or evaluate the actual inference bill — the
+    residual-perf benchmark and the serving-side batch planner.
+    """
+    from repro.core import spectral as spectral_lib
+    if problem is None:
+        from repro import pde as pde_lib
+        problem = pde_lib.get_problem(pde)
+    M = problem.spectral_points if points is None else points
+    step = start_step
+    while True:
+        anchors = problem.sample_collocation(_step_key(seed, step),
+                                             n_anchors)
+        rows = spectral_lib.spectral_line_rows(
+            anchors, problem.in_dim, M, problem.spectral_extent)
+        yield anchors, rows
+        step += 1

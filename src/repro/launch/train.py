@@ -117,6 +117,12 @@ def train_pinn(args):
 
     build = pinn_reduced if args.reduced else pinn_config
     overrides = {"hidden": args.hidden} if args.hidden else {}
+    if args.estimator:
+        # estimator choice travels in the config, so config_to_meta below
+        # writes it into the checkpoint meta for serving/resume
+        overrides["deriv"] = args.estimator
+    if args.spectral_points:
+        overrides["spectral_points"] = args.spectral_points
     if args.quant or args.phase_bits:
         # quantization-aware ZO training: fake-quant inside the loss —
         # zoo/zo_shard and the wire protocol are untouched (DESIGN.md
@@ -322,6 +328,18 @@ def main(argv=None):
                     help="override the PINN hidden width")
     ap.add_argument("--zo-samples", type=int, default=10,
                     help="N SPSA perturbations per ZO step (paper: 10)")
+    ap.add_argument("--estimator", default=None,
+                    choices=[None, "fd", "fd_fast", "stein", "spectral",
+                             "auto"],
+                    help="derivative estimator override: central FD "
+                         "(stacked / incremental-stencil), Gaussian Stein, "
+                         "FFT-exact spectral line grids, or 'auto' = the "
+                         "problem's own choice; default keeps the fused-"
+                         "path fd_fast/fd selection")
+    ap.add_argument("--spectral-points", type=int, default=None,
+                    help="line-grid size M per active axis for "
+                         "--estimator spectral (default: the problem's "
+                         "spectral_points)")
     ap.add_argument("--sequential", action="store_true",
                     help="photonic-realism order: one perturbed mesh at a "
                          "time instead of the fused stacked program")

@@ -182,6 +182,20 @@ class PDEProblem:
     residual_tol: float = 5e-2    # documented FD noise floor (see above)
     coeff_spec: CoeffSpec | None = None  # set → coefficient-conditioned
 
+    # Per-problem derivative-estimator choice (repro.core.pinn resolves
+    # PINNConfig.deriv == "auto" to this; every shipped problem keeps
+    # "fd" so pre-PR trajectories stay bit-identical).  The spectral
+    # estimator samples per-axis line grids of ``spectral_points`` points
+    # spanning ``spectral_extent`` in each active coordinate and recovers
+    # derivatives by rfft; ``spectral_periodization`` picks how a
+    # non-periodic box is made FFT-ready ("window" = C^∞ taper of
+    # u − u(anchor) on an unwrapped line segment, "periodic" = raw rfft
+    # for genuinely periodic solutions).  See repro.core.spectral.
+    estimator: str = "fd"                 # "fd" | "stein" | "spectral"
+    spectral_points: int = 16             # line-grid size M (per axis)
+    spectral_extent: float = 1.0          # line length W (one FFT period)
+    spectral_periodization: str = "window"
+
     @property
     def in_dim(self) -> int:
         """Physical input width (x [, t]) — FD stencils differentiate
@@ -257,6 +271,23 @@ class PDEProblem:
 
     def exact_solution(self, xt: jax.Array) -> jax.Array | None:
         """Closed-form u(xt) for validation, or None if unknown."""
+        return None
+
+    def spectral_carrier(self, rows: jax.Array, anchors: jax.Array):
+        """Closed-form additive ansatz part β with analytic derivatives,
+        or None.
+
+        The spectral estimator differentiates by FFT along line segments
+        that may cross kinks of the hard-constraint ansatz (HJB's ‖x‖₁
+        has one at x_i = 0) — non-smooth closed-form terms would leave
+        O(1) Gibbs error in the Hessian.  A problem whose ansatz is
+        u = s + β with s the smooth learned part and β closed-form
+        returns ``(β(rows), ∇β(anchors), diag∇²β(anchors))`` here: shapes
+        ``(R,)``, ``(B, A)``, ``(B, A)`` for ``rows`` (R, net_dim) and
+        ``anchors`` (B, net_dim), A = in_dim.  The FFT then sees only
+        u − β and β's exact derivatives are added back at the anchors.
+        Returning None (default) differentiates u directly.
+        """
         return None
 
     @property

@@ -84,6 +84,18 @@ class BlackScholesProblem(base.PDEProblem):
         x, t = xt[..., :D], xt[..., D]
         return (1.0 - t) * f + self._terminal(x)
 
+    def spectral_carrier(self, rows: jax.Array, anchors: jax.Array):
+        """β = ‖x‖²/D — the ansatz's closed-form payoff term, removed
+        analytically: ∂_i β = 2x_i/D, diag ∇²β = 2/D, ∂_t β = 0."""
+        D = self.space_dim
+        beta = self._terminal(rows[..., :D])
+        grad_x = 2.0 * anchors[..., :D] / D
+        zeros_t = jnp.zeros_like(anchors[..., D:D + 1])
+        hess_x = jnp.full_like(grad_x, 2.0 / D)
+        return (beta,
+                jnp.concatenate([grad_x, zeros_t], axis=-1),
+                jnp.concatenate([hess_x, zeros_t], axis=-1))
+
     def residual(self, est: stein.DerivativeEstimate,
                  xt: jax.Array) -> jax.Array:
         """u_t + ½σ² Σ x_i²∂²_i u − r(u − Σ x_i ∂_i u)."""

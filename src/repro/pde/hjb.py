@@ -90,6 +90,19 @@ class HJBProblem(base.PDEProblem):
         return (u_t + lap
                 - self._lam(xt) * jnp.sum(grad_x * grad_x, axis=-1) + 2.0)
 
+    def spectral_carrier(self, rows: jax.Array, anchors: jax.Array):
+        """β = ‖x‖₁ — the ansatz's closed-form part, with a kink at
+        x_i = 0 that spectral line segments near the domain edge would
+        cross (O(1) Gibbs error in the FFT Hessian).  Subtracting it
+        leaves the smooth (1−t)·f; its exact derivatives are
+        ∂_i β = sign(x_i), ∂_t β = 0, diag ∇²β = 0."""
+        D = self.space_dim
+        beta = jnp.sum(jnp.abs(rows[..., :D]), axis=-1)
+        grad = jnp.concatenate(
+            [jnp.sign(anchors[..., :D]),
+             jnp.zeros_like(anchors[..., D:D + 1])], axis=-1)
+        return beta, grad, jnp.zeros_like(grad)
+
     def exact_solution(self, xt: jax.Array) -> jax.Array:
         """u(x,t) = ‖x‖₁ + (2 − λD)(1 − t)  (= ‖x‖₁ + 1 − t at λ = 1/D)."""
         D = self.space_dim

@@ -144,7 +144,13 @@ def test_stein_estimate_on_quadratic():
 
 
 def test_num_fd_inferences_matches_paper():
-    assert stein.num_fd_inferences(21) == 42  # paper §4.2
+    # fd_estimate runs 2A+1 stacked rows (base batch + 2A perturbations);
+    # the paper's "42 inferences for d=21" (§4.2) counts the perturbed
+    # batches only — a derived quantity, not the stacked-row count.
+    assert stein.num_fd_inferences(21) == 43
+    assert stein.num_fd_inferences(21) - 1 == 42  # paper §4.2
+    # conditioned rows: only the n_active physical prefix is perturbed
+    assert stein.num_fd_inferences(24, n_active=21) == 43
 
 
 # ----------------------------------------------------------------------- ZOO

@@ -182,6 +182,76 @@ def test_tt_contract_multi_axis_property(P, C, batch, shared_x):
 
 @settings(deadline=None, max_examples=15)
 @given(
+    M=st.sampled_from([8, 12, 16, 32]),
+    n_freq=st.integers(1, 3),
+    dim=st.integers(1, 4),
+    batch=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_spectral_periodic_exact_on_band_limited_property(M, n_freq, dim,
+                                                          batch, seed):
+    """Property: periodic-mode spectral derivatives are exact (to f32
+    roundoff scaled by the k²-amplified Hessian magnitude) on trig
+    polynomials with max frequency < M/2, for any grid size, frequency
+    content, dimension, and anchor batch."""
+    from repro.core import spectral
+    rs = np.random.RandomState(seed)
+    n_freq = min(n_freq, (M - 1) // 2)
+    coef = rs.randn(n_freq, 2)
+
+    def f(x):
+        out = 0.0
+        for m in range(1, n_freq + 1):
+            out = out + coef[m - 1, 0] * jnp.cos(2 * jnp.pi * m * x) \
+                      + coef[m - 1, 1] * jnp.sin(2 * jnp.pi * m * x)
+        return jnp.sum(out, axis=-1)
+
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (batch, dim))
+    est = spectral.spectral_estimate(f, x, points=M, extent=1.0,
+                                     periodization="periodic")
+    g = jax.vmap(jax.grad(lambda p: f(p[None])[0]))(x)
+    h = jax.vmap(lambda p: jnp.diag(
+        jax.hessian(lambda q: f(q[None])[0])(p)))(x)
+    scale = float(np.sum(np.abs(coef)) * (2 * np.pi * n_freq) ** 2)
+    np.testing.assert_allclose(np.asarray(est.grad), np.asarray(g),
+                               atol=max(1e-4, 2e-5 * scale))
+    np.testing.assert_allclose(np.asarray(est.hess_diag), np.asarray(h),
+                               atol=max(1e-3, 2e-4 * scale))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    M=st.sampled_from([8, 16, 32]),
+    batch=st.integers(1, 8),
+    dim=st.integers(1, 4),
+    a=st.floats(-1.0, 1.0),
+    b=st.floats(-1.0, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_spectral_windowed_agrees_with_fd_property(M, batch, dim, a, b,
+                                                   seed):
+    """Property: windowed-mode spectral derivatives of a smooth
+    non-periodic function agree with fd_estimate within the two
+    documented floors (spectral's WINDOWED_FLOOR + FD's h² truncation /
+    ε/h² rounding), for any grid size, batch, dimension, and function
+    mix."""
+    from repro.core import spectral, stein
+    f = lambda x: jnp.sum(jnp.exp(a * x) + b * x ** 3
+                          + 0.5 * jnp.sin(x), axis=-1)
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (batch, dim))
+    sp = spectral.spectral_estimate(f, x, points=M, extent=1.0)
+    fd = stein.fd_estimate(f, x, h=1e-2)
+    fd_floor = 2e-2  # ε·|u|/h² f32 rounding on second differences
+    np.testing.assert_allclose(
+        np.asarray(sp.grad), np.asarray(fd.grad),
+        atol=spectral.WINDOWED_FLOOR + 1e-3)
+    np.testing.assert_allclose(
+        np.asarray(sp.hess_diag), np.asarray(fd.hess_diag),
+        atol=spectral.WINDOWED_FLOOR + fd_floor)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
     h=st.sampled_from([2, 4, 8]),
     kh_div=st.sampled_from([1, 2]),
     s=st.integers(16, 160),
