@@ -25,6 +25,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * residual_perf/* — spectral vs fd residual estimator: inferences per
                     loss evaluation, matched-MSE check and jitted ZO-step
                     wall clock (BENCH_residual_perf.json)
+  * ns_data/*     — ns-2d three-term composite loss: full vs data-ablated
+                    ZO training, spectral-path and legacy loss parity
+                    checks (BENCH_ns_data.json)
   * roofline/*    — aggregated dry-run roofline terms (derived = roofline
                     fraction; run launch/dryrun.py first to populate)
 """
@@ -133,6 +136,15 @@ def bench_residual_perf(rows):
         residual_perf.run(pdes=("heat-10d",), epochs=150, repeats=3))
 
 
+def bench_ns_data(rows):
+    """ns-2d composite-loss training at a reduced budget (one seed, short
+    arms — benchmarks/ns_data.py standalone runs the full gated budget
+    with the val-MSE floor, ablation, spectral-path and legacy-parity
+    checks)."""
+    from benchmarks import ns_data
+    rows += ns_data.summarize(ns_data.run(epochs=150))
+
+
 def bench_coeff_family(rows):
     """Conditioned-family comparison at a reduced budget (hjb only —
     benchmarks/coeff_family.py standalone runs all three families with
@@ -168,6 +180,9 @@ def main() -> None:
     ap.add_argument("--skip-residual-perf", action="store_true",
                     help="skip the spectral-vs-fd estimator comparison "
                          "(~2 min at the reduced heat-only budget)")
+    ap.add_argument("--skip-ns-data", action="store_true",
+                    help="skip the ns-2d composite-loss benchmark (~1 min "
+                         "at the reduced single-seed budget)")
     args, _ = ap.parse_known_args()
 
     rows: list = []
@@ -188,6 +203,8 @@ def main() -> None:
         bench_coeff_family(rows)
     if not args.skip_residual_perf:
         bench_residual_perf(rows)
+    if not args.skip_ns_data:
+        bench_ns_data(rows)
     if not args.skip_table1:
         from benchmarks import table1_hjb
         rows += table1_hjb.run(hidden=64, epochs=args.table1_epochs)

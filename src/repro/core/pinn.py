@@ -43,8 +43,8 @@ from repro.core import fastmath, photonic, spectral as spectral_lib, stein, tt
 from repro.kernels import quant as quant_lib
 
 __all__ = ["PINNConfig", "TensorPinn", "sample_collocation",
-           "residual_loss", "residual_losses_stacked", "validation_mse",
-           "config_to_meta", "config_from_meta",
+           "residual_loss", "residual_losses_stacked", "per_term_losses",
+           "validation_mse", "config_to_meta", "config_from_meta",
            # deprecated HJB-specific aliases
            "HJBPinn", "hjb_exact_solution", "hjb_residual_loss",
            "hjb_residual_losses_stacked"]
@@ -156,6 +156,13 @@ class TensorPinn:
         self.space_dim = self.problem.space_dim
         self.in_dim = self.problem.in_dim
         self.net_in = self.problem.net_dim
+        # width the network actually consumes: problems with an input
+        # feature map (``embed_features`` — e.g. ns-2d's periodic Fourier
+        # features) widen/narrow the row inside ``_embed``; everyone else
+        # keeps feat_in == net_in, so the padding arithmetic below is
+        # bit-identical to the pre-feature-map stack
+        self.feat_in = (self.problem.feature_dim
+                        if self.problem.has_feature_map else self.net_in)
         # effective FD step: an explicit config value wins; the None
         # sentinel defers to the problem's recommended step (the one its
         # residual_tol noise floor is documented at — DESIGN.md §PDE).
@@ -176,10 +183,10 @@ class TensorPinn:
         if cfg.mode in ("tt", "tonn"):
             # pad the input up to a TT-factorizable width (the paper folds
             # 21 → 1024 so layer 1 is a 1024×1024 TT matrix); coefficient
-            # slots count toward the unpadded width
-            self.in_pad = h if h >= self.net_in else -(-self.net_in // 8) * 8
+            # slots (and feature-map outputs) count toward the unpadded width
+            self.in_pad = h if h >= self.feat_in else -(-self.feat_in // 8) * 8
         else:
-            self.in_pad = self.net_in
+            self.in_pad = self.feat_in
         # layer dims after padding the input up to the TT-factorizable size
         self.dims = [(h, self.in_pad), (h, h), (1, h)]
         if cfg.mode in ("tt", "tonn"):
@@ -364,20 +371,25 @@ class TensorPinn:
     def _embed(self, xt: jax.Array) -> jax.Array:
         """Raw rows (..., net_in) → network inputs (..., in_pad).
 
-        Coefficient slots are normalized to [0,1] via the problem's
-        ``CoeffSpec`` (so the net sees O(1) inputs whatever the raw
-        coefficient units), the physical coordinates pass through
-        untouched, and the row is zero-padded to the TT-factorizable
-        width.  Unconditioned problems reduce this to exactly the legacy
-        pad (bit-identical off-path)."""
-        h = xt
-        spec = self.problem.coeff_spec
-        if spec is not None:
-            h = jnp.concatenate(
-                [h[..., :self.in_dim],
-                 spec.normalize(h[..., self.in_dim:self.net_in])], axis=-1)
-        if self.in_pad > self.net_in:
-            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.net_in,),
+        Problems with an input feature map (``embed_features`` — e.g.
+        ns-2d's periodic Fourier features) replace the row entirely;
+        otherwise coefficient slots are normalized to [0,1] via the
+        problem's ``CoeffSpec`` (so the net sees O(1) inputs whatever the
+        raw coefficient units) and the physical coordinates pass through
+        untouched.  Either way the row is zero-padded to the
+        TT-factorizable width.  Unconditioned feature-map-free problems
+        reduce this to exactly the legacy pad (bit-identical off-path)."""
+        if self.problem.has_feature_map:
+            h = self.problem.embed_features(xt)
+        else:
+            h = xt
+            spec = self.problem.coeff_spec
+            if spec is not None:
+                h = jnp.concatenate(
+                    [h[..., :self.in_dim],
+                     spec.normalize(h[..., self.in_dim:self.net_in])], axis=-1)
+        if self.in_pad > self.feat_in:
+            pad = jnp.zeros(h.shape[:-1] + (self.in_pad - self.feat_in,),
                             h.dtype)
             h = jnp.concatenate([h, pad], axis=-1)
         return h
@@ -630,22 +642,71 @@ def _loss_from_u_stencil(problem: pde_lib.PDEProblem, vals: jax.Array,
     [x, x+h·e_1, ..., x−h·e_Din]: vals (2·Din+1, B) → scalar.  The generic
     stencil→DerivativeEstimate assembly is problem-independent; the problem
     supplies the estimate→residual reduction."""
-    est = pde_lib.estimate_from_u_stencil(vals, h)
+    est = problem.scale_estimate(pde_lib.estimate_from_u_stencil(vals, h))
     r = problem.residual(est, xt)
     return jnp.mean(r * r)
 
 
 def _boundary_mse(u_b: jax.Array, ub_target: jax.Array) -> jax.Array:
-    """Mean-squared boundary mismatch, reduced over the trailing (batch)
-    axis so it broadcasts over a leading stacked-perturbation axis."""
+    """Mean-squared target mismatch (boundary- and data-term reduction),
+    reduced over the trailing (batch) axis so it broadcasts over a leading
+    stacked-perturbation axis."""
     return jnp.mean((u_b - ub_target) ** 2, axis=-1)
+
+
+def _term_plan(problem: pde_lib.PDEProblem, bc: tuple | None,
+               term_batches: dict | None) -> tuple:
+    """Normalize the two batch-passing conventions into the term engine's
+    execution plan: ``(collocation_weight, [(LossTerm, (x, target)), ...])``.
+
+    ``term_batches`` is the native form — a dict keyed by term NAME (from
+    ``problem.loss_terms()``) holding ``(x, target)`` batches for the
+    non-collocation terms; the collocation batch is the positional ``xt``.
+    Missing terms are simply not assembled this step (alternating-batch
+    schedules); an entry of ``None`` is skipped the same way; unknown
+    names raise.  ``bc=(xb, ub)`` is the deprecated pre-term-engine
+    convention and maps onto the problem's (first) boundary-kind term —
+    synthesized at ``bc_weight`` when the problem declares none, exactly
+    the legacy ``L_r + λ·L_b`` arithmetic.  Passing both is ambiguous and
+    raises."""
+    if bc is not None and term_batches is not None:
+        raise ValueError(
+            "pass either bc= (deprecated) or term_batches=, not both")
+    terms = problem.loss_terms()
+    coll_w = next(
+        (t.weight for t in terms if t.kind == "collocation"), 1.0)
+    if bc is not None:
+        b_terms = [t for t in terms if t.kind == "boundary"]
+        term = b_terms[0] if b_terms else pde_lib.LossTerm(
+            "boundary", "boundary", problem.bc_weight)
+        return coll_w, [(term, bc)]
+    if not term_batches:
+        return coll_w, []
+    known = {t.name: t for t in terms if t.kind != "collocation"}
+    unknown = sorted(set(term_batches) - set(known))
+    if unknown:
+        raise ValueError(
+            f"unknown loss term(s) {unknown} for PDE {problem.name!r}; "
+            f"known non-collocation terms: {sorted(known)}")
+    return coll_w, [(known[name], batch)
+                    for name, batch in term_batches.items()
+                    if batch is not None]
 
 
 def _resolve_deriv(cfg: PINNConfig, problem: pde_lib.PDEProblem) -> str:
     """The estimator dispatch seam (DESIGN.md §Residual-estimators):
     ``cfg.deriv == "auto"`` defers to the problem's ``estimator``
-    attribute; an explicit config value always wins."""
-    return problem.estimator if cfg.deriv == "auto" else cfg.deriv
+    attribute; an explicit config value always wins.  One forced
+    downgrade: ``fd_fast``'s incremental rank-1 stencil assumes the
+    input embedding is affine per coordinate, which a problem feature
+    map (``embed_features`` — e.g. ns-2d's Fourier features) breaks,
+    so feature-map problems take the plain-fd stencil instead (same
+    estimate, more layer-1 matvecs; no legacy behavior to preserve —
+    no pre-feature-map problem has a feature map)."""
+    deriv = problem.estimator if cfg.deriv == "auto" else cfg.deriv
+    if deriv == "fd_fast" and problem.has_feature_map:
+        return "fd"
+    return deriv
 
 
 def _spectral_grid(model: "TensorPinn") -> tuple:
@@ -667,6 +728,7 @@ def _spectral_loss_terms(model: "TensorPinn", vals: jax.Array,
     est = spectral_lib.estimate_from_line_vals(
         vals, xt, model.in_dim, M, extent, periodization,
         carrier=problem.spectral_carrier(rows, xt))
+    est = problem.scale_estimate(est)
     r = problem.residual(est, xt)
     return jnp.mean(r * r, axis=-1)
 
@@ -674,15 +736,22 @@ def _spectral_loss_terms(model: "TensorPinn", vals: jax.Array,
 def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
                   noise: dict | None = None,
                   key: jax.Array | None = None,
-                  bc: tuple | None = None) -> jax.Array:
-    """BP-free PDE loss (paper Eq. 4): L_r, plus λ·L_b when the problem has
-    a boundary term and a boundary batch ``bc = (xb, ub_target)`` is given.
+                  bc: tuple | None = None,
+                  term_batches: dict | None = None) -> jax.Array:
+    """BP-free composite PDE loss: the weighted sum of the problem's
+    ``loss_terms()`` — the collocation residual L_r over ``xt``, plus
+    ``weight · MSE(u(x), target)`` for every boundary/data term whose
+    batch is supplied via ``term_batches={name: (x, target)}`` (paper
+    Eq. 4 generalized; ``bc=(xb, ub)`` is the deprecated two-term form
+    and stays bit-identical — see ``_term_plan``).
 
     Derivatives are estimated inference-only (FD, Stein or spectral per
     ``cfg.deriv``, "auto" deferring to ``problem.estimator``); the bound
-    ``PDEProblem`` reduces the estimate to a pointwise residual.
-    TONN densification is hoisted here: ONE mesh→core pass per loss
-    evaluation, shared by every stencil inference (DESIGN.md §Perf).
+    ``PDEProblem`` reduces the estimate to a pointwise residual, with
+    ``scale_estimate`` folding the domain-normalization Jacobian in
+    first (identity for unit-box problems).  TONN densification is
+    hoisted here: ONE mesh→core pass per loss evaluation, shared by
+    every stencil inference (DESIGN.md §Perf).
     """
     cfg = model.cfg
     problem = model.problem
@@ -707,11 +776,14 @@ def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
             est = stein.stein_estimate(f, xt, key, sigma=cfg.stein_sigma,
                                        num_samples=cfg.stein_samples,
                                        n_active=model.in_dim)
+        est = problem.scale_estimate(est)
         r = problem.residual(est, xt)
         loss = jnp.mean(r * r)
-    if bc is not None:
-        xb, ub = bc
-        loss = loss + problem.bc_weight * _boundary_mse(
+    coll_w, plan = _term_plan(problem, bc, term_batches)
+    if coll_w != 1.0:  # static: default weight keeps the legacy graph
+        loss = coll_w * loss
+    for t, (xb, ub) in plan:
+        loss = loss + t.weight * _boundary_mse(
             model.u(params, xb, noise), ub)
     return loss
 
@@ -719,9 +791,13 @@ def residual_loss(model: TensorPinn, params: dict, xt: jax.Array,
 def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
                             xt: jax.Array, noise: dict | None = None,
                             key: jax.Array | None = None,
-                            bc: tuple | None = None) -> jax.Array:
-    """The ZO hot path: residual losses of P stacked parameter sets (leading
-    axis on every leaf) over ONE shared collocation batch → (P,) losses.
+                            bc: tuple | None = None,
+                            term_batches: dict | None = None) -> jax.Array:
+    """The ZO hot path: composite losses of P stacked parameter sets
+    (leading axis on every leaf) over ONE shared collocation batch →
+    (P,) losses.  Boundary/data terms ride the same stacked forward
+    (``term_batches`` — the same term-engine contract as
+    ``residual_loss``; ``bc`` is the deprecated two-term form).
 
     For dense/tt/tonn/onn with FD or spectral derivatives this runs as a
     small number of batched programs (densify-once via the batched mesh
@@ -742,12 +818,14 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
             deriv not in ("fd", "fd_fast", "spectral"):
         if key is None:
             return jax.vmap(
-                lambda p: residual_loss(model, p, xt, noise, None, bc)
+                lambda p: residual_loss(model, p, xt, noise, None, bc,
+                                        term_batches)
             )(stacked_params)
         P = jax.tree.leaves(stacked_params)[0].shape[0]
         keys = jax.random.split(key, P)
         return jax.vmap(
-            lambda p, k: residual_loss(model, p, xt, noise, k, bc)
+            lambda p, k: residual_loss(model, p, xt, noise, k, bc,
+                                       term_batches)
         )(stacked_params, keys)
     prepared = model.prepare_params_stacked(stacked_params, noise)
     # tonn bakes the (shared-chip) hardware noise into the densified cores;
@@ -770,11 +848,35 @@ def residual_losses_stacked(model: TensorPinn, stacked_params: dict,
             vals = vals.reshape(vals.shape[0], 2 * A + 1, B)
         losses = jax.vmap(
             lambda v: _loss_from_u_stencil(problem, v, h, xt))(vals)
-    if bc is not None:
-        xb, ub = bc
-        losses = losses + problem.bc_weight * _boundary_mse(
+    coll_w, plan = _term_plan(problem, bc, term_batches)
+    if coll_w != 1.0:  # static: default weight keeps the legacy graph
+        losses = coll_w * losses
+    for t, (xb, ub) in plan:
+        losses = losses + t.weight * _boundary_mse(
             model.u_stacked(prepared, xb, eff_noise), ub)
     return losses
+
+
+def per_term_losses(model: TensorPinn, params: dict, xt: jax.Array,
+                    noise: dict | None = None,
+                    key: jax.Array | None = None,
+                    term_batches: dict | None = None) -> dict:
+    """UNWEIGHTED per-term losses, keyed by term name — the logging /
+    benchmark view of the composite loss (``residual_loss`` equals
+    ``sum(w_t · per_term_losses[t])`` with the weights from
+    ``problem.term_weights()``).  Terms whose batch is absent from
+    ``term_batches`` are omitted from the dict."""
+    problem = model.problem
+    out = {}
+    for t in problem.loss_terms():
+        if t.kind == "collocation":
+            out[t.name] = residual_loss(model, params, xt, noise, key)
+        else:
+            batch = (term_batches or {}).get(t.name)
+            if batch is not None:
+                xb, ub = batch
+                out[t.name] = _boundary_mse(model.u(params, xb, noise), ub)
+    return out
 
 
 def validation_mse(model: TensorPinn, params: dict, xt: jax.Array,

@@ -170,7 +170,7 @@ def _freqs(points: int, extent: float) -> jax.Array:
 
 
 def spectral_derivs(line_vals: jax.Array, extent: float,
-                    periodization: str = "window",
+                    periodization="window",
                     plateau: float = 0.25) -> tuple:
     """(∂u, ∂²u) at the anchor (center index) of each line.
 
@@ -180,7 +180,28 @@ def spectral_derivs(line_vals: jax.Array, extent: float,
     (differentiated analytically — locally-quadratic u is exact) and
     applies the C^∞ taper to the residue first (exact at the anchor:
     w = 1, w' = w'' = 0 there).
+
+    ``periodization`` may also be a PER-AXIS tuple — e.g. ns-2d's
+    ("periodic", "periodic", "window") for a periodic box with a
+    non-periodic time axis.  Mixed tuples require the lines' axis
+    dimension at position −2 (the (..., B, A, M) layout of
+    ``line_vals_from_rows_vals``): entry ``a`` periodizes the lines of
+    active axis ``a``.  A uniform tuple collapses to its scalar form.
     """
+    if not isinstance(periodization, str):
+        ps = tuple(periodization)
+        if not ps:
+            raise ValueError("empty periodization tuple")
+        if all(p == ps[0] for p in ps):
+            return spectral_derivs(line_vals, extent, ps[0], plateau)
+        if line_vals.ndim < 2 or line_vals.shape[-2] != len(ps):
+            raise ValueError(
+                f"per-axis periodization of {len(ps)} entries needs lines "
+                f"shaped (..., {len(ps)}, M); got {line_vals.shape}")
+        per_axis = [spectral_derivs(line_vals[..., a, :], extent, p, plateau)
+                    for a, p in enumerate(ps)]
+        return (jnp.stack([d1 for d1, _ in per_axis], axis=-1),
+                jnp.stack([d2 for _, d2 in per_axis], axis=-1))
     M = line_vals.shape[-1]
     c = M // 2
     trend1 = trend2 = None
@@ -210,12 +231,26 @@ def spectral_derivs(line_vals: jax.Array, extent: float,
 
 
 def spectral_derivs_ref(line_vals, extent: float,
-                        periodization: str = "window",
+                        periodization="window",
                         plateau: float = 0.25) -> tuple:
     """Naive O(M²) DFT oracle for ``spectral_derivs`` (numpy float64,
     per-mode cos/sin sums, explicit lstsq detrend) — the reference the
     vectorized rfft path is tested against, mirroring the kernels'
-    jnp-oracle discipline."""
+    jnp-oracle discipline.  Per-axis periodization tuples loop the axes
+    at position −2, matching ``spectral_derivs``."""
+    if not isinstance(periodization, str):
+        ps = tuple(periodization)
+        v = np.asarray(line_vals, dtype=np.float64)
+        if all(p == ps[0] for p in ps):
+            return spectral_derivs_ref(line_vals, extent, ps[0], plateau)
+        if v.ndim < 2 or v.shape[-2] != len(ps):
+            raise ValueError(
+                f"per-axis periodization of {len(ps)} entries needs lines "
+                f"shaped (..., {len(ps)}, M); got {v.shape}")
+        per_axis = [spectral_derivs_ref(v[..., a, :], extent, p, plateau)
+                    for a, p in enumerate(ps)]
+        return (np.stack([d1 for d1, _ in per_axis], axis=-1),
+                np.stack([d2 for _, d2 in per_axis], axis=-1))
     v = np.asarray(line_vals, dtype=np.float64)
     M = v.shape[-1]
     c = M // 2
@@ -246,7 +281,7 @@ def spectral_derivs_ref(line_vals, extent: float,
 
 def estimate_from_line_vals(vals: jax.Array, anchors: jax.Array,
                             n_active: int, points: int, extent: float,
-                            periodization: str = "window",
+                            periodization="window",
                             carrier=None) -> stein.DerivativeEstimate:
     """Assemble a ``DerivativeEstimate`` from u-values over the deduped
     line rows — the entry point the PINN loss paths share with
@@ -280,7 +315,7 @@ def estimate_from_line_vals(vals: jax.Array, anchors: jax.Array,
 
 def spectral_estimate(f: Callable[[jax.Array], jax.Array], x: jax.Array,
                       points: int = 32, extent: float = 1.0,
-                      periodization: str = "window",
+                      periodization="window",
                       n_active: int | None = None,
                       carrier=None) -> stein.DerivativeEstimate:
     """FFT-exact derivatives of ``f`` at the anchors ``x`` via ONE batched

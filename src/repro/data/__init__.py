@@ -1,2 +1,4 @@
 from repro.data.pipeline import (  # noqa: F401
-    DataConfig, synthetic_lm_batch, lm_batch_iterator, pde_collocation_iterator)
+    DataConfig, synthetic_lm_batch, lm_batch_iterator,
+    pde_collocation_iterator, pde_line_grid_iterator,
+    pde_term_batch_iterator)

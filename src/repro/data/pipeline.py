@@ -7,7 +7,10 @@ Two sources:
     resuming from step k regenerates exactly the batches ≥ k (this is what
     makes checkpoint/restart bit-exact end to end).
   * PDE collocation sampler for the PINN experiments (uniform over the
-    domain, fresh each step, same counter-based determinism).
+    domain, fresh each step, same counter-based determinism), plus the
+    loss-term channel (``pde_term_batch_iterator``) streaming boundary /
+    data batches for the composite-loss engine on disjoint shards of the
+    same key space.
 
 Synthetic tokens follow a Zipf-ish distribution so MoE routing and the CE
 softmax see realistic skew rather than uniform noise.
@@ -111,6 +114,45 @@ def pde_collocation_iterator(n: int, space_dim: int = 20, seed: int = 0,
     step = start_step
     while True:
         yield sample(_step_key(seed, step))
+        step += 1
+
+
+def pde_term_batch_iterator(n: int, seed: int = 0, start_step: int = 0,
+                            pde: str | None = None, problem=None,
+                            sizes: dict | None = None) -> Iterator[dict]:
+    """Counter-based stream of NON-collocation term batches: yields one
+    ``{term_name: (x, target)}`` dict per step — the ``term_batches=``
+    form ``repro.core.pinn.residual_loss`` consumes — covering every
+    boundary/data term of ``problem.loss_terms()``.
+
+    Key derivation: the per-step key uses shard=1 (the collocation stream
+    owns shard 0 at the same seed/step, so the two streams never reuse a
+    key) and is folded with the term's INDEX in ``loss_terms()`` order, so
+    each term draws an independent, restart-safe sequence.  Problems whose
+    samplers draw noise from the key (ns-2d's data term) therefore replay
+    identical observations on resume.
+
+    ``n`` is the default batch size per term; ``sizes`` overrides it per
+    name (``{"data": 256}``).  Terms whose sampler returns None are
+    skipped that step; a problem with no non-collocation terms yields
+    empty dicts.
+    """
+    if problem is None:
+        from repro import pde as pde_lib
+        problem = pde_lib.get_problem(pde)
+    sizes = sizes or {}
+    terms = [(i, t) for i, t in enumerate(problem.loss_terms())
+             if t.kind != "collocation" and t.sample is not None]
+    step = start_step
+    while True:
+        key = _step_key(seed, step, shard=1)
+        out = {}
+        for i, t in terms:
+            batch = t.sample(jax.random.fold_in(key, i),
+                             int(sizes.get(t.name, n)))
+            if batch is not None:
+                out[t.name] = batch
+        yield out
         step += 1
 
 

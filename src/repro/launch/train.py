@@ -82,6 +82,49 @@ def _parse_coeff_ranges(text: str) -> dict:
     return out
 
 
+def _parse_term_weights(entries) -> dict:
+    """Repeated ``--term-weight NAME=W[,NAME=W]`` → {name: float}."""
+    out = {}
+    for text in entries:
+        for part in text.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                name, w = part.split("=")
+                out[name.strip()] = float(w)
+            except ValueError:
+                raise SystemExit(
+                    f"--term-weight: malformed entry {part!r} "
+                    "(expected NAME=W[,NAME=W])")
+    if not out:
+        raise SystemExit("--term-weight: no weights given")
+    return out
+
+
+def _apply_term_weights(args, problem) -> dict:
+    """Resolve --term-weight/--bc-weight into ``set_term_weights``
+    overrides on ``problem`` (the loss-term engine, DESIGN.md
+    §Loss-terms).  --bc-weight is sugar for the problem's boundary-kind
+    term(s) — helmholtz-2d's λ, ns-2d's "ic" — an explicit --term-weight
+    for the same name wins.  Returns the applied overrides."""
+    tw = _parse_term_weights(args.term_weight) if args.term_weight else {}
+    if args.bc_weight is not None:
+        b_names = [t.name for t in problem.loss_terms()
+                   if t.kind == "boundary"]
+        if not b_names:
+            raise SystemExit(f"--bc-weight: PDE {problem.name!r} has no "
+                             "boundary-kind loss term")
+        for name in b_names:
+            tw.setdefault(name, args.bc_weight)
+    if tw:
+        try:
+            problem.set_term_weights(tw)
+        except ValueError as e:
+            raise SystemExit(f"--term-weight: {e}")
+    return tw
+
+
 def _conditioned_problem(args):
     """Resolve --pde plus any --coeff-range/--coeff-dist overrides into a
     problem instance (None → let the config/model resolve the name as
@@ -113,7 +156,7 @@ def train_pinn(args):
     """
     from repro.configs.hjb_pinn import pinn_config, pinn_reduced
     from repro.core import pinn, zoo
-    from repro.data import pde_collocation_iterator
+    from repro.data import pde_collocation_iterator, pde_term_batch_iterator
 
     build = pinn_reduced if args.reduced else pinn_config
     overrides = {"hidden": args.hidden} if args.hidden else {}
@@ -136,6 +179,11 @@ def train_pinn(args):
     problem_override = _conditioned_problem(args)
     model = pinn.TensorPinn(cfg, problem=problem_override)
     problem = model.problem
+    weight_overrides = _apply_term_weights(args, problem)
+    if weight_overrides:
+        print("[pinn] term weights: "
+              + " ".join(f"{k}={v:g}"
+                         for k, v in problem.term_weights().items()))
     print(f"[pinn] pde={problem.name} in_dim={problem.in_dim} "
           f"mode={cfg.mode} hidden={cfg.hidden} deriv={cfg.deriv} "
           f"fused={cfg.use_fused_kernel}"
@@ -173,6 +221,10 @@ def train_pinn(args):
         # restores them to normalize inputs identically and to reject
         # queries outside the trained family (DESIGN.md §Parameterized)
         ckpt_meta["coeff_spec"] = problem.coeff_spec.to_meta()
+    # the trained loss composition travels too: serving/validation rebuild
+    # the SAME weighted loss from the checkpoint alone (DESIGN.md
+    # §Loss-terms) — overrides applied, defaults recorded explicitly
+    ckpt_meta["term_weights"] = problem.term_weights()
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, keep=3,
                                 save_every=args.ckpt_every,
@@ -191,8 +243,9 @@ def train_pinn(args):
                          f"(got --optimizer {opt_name}); the BP baselines "
                          "use the GSPMD mesh path of the LM archs instead")
 
-    # both branches share the step signature (params, aux, xt, bc, lr_t) →
+    # both branches share the step signature (params, aux, xt, tb, lr_t) →
     # (params, aux, loss) so one loop below owns watchdog/logging/checkpoints
+    # (tb = the per-step term-batch dict from the composite-loss engine)
     if opt_name == "zo-signsgd" and args.shard:
         # distributed ZO: shard the SPSA sweep over an explicit mesh —
         # per-step traffic is O(N) scalars, params never move (DESIGN.md
@@ -213,8 +266,10 @@ def train_pinn(args):
         aux_name = "zo"
         step_fn = zo_shard.make_distributed_zo_step(
             mesh,
-            lambda sp, xt, bc: pinn.residual_losses_stacked(
-                model, sp, xt, hw_noise, bc=bc),
+            # the replicated bc slot carries the term-batch dict pytree:
+            # boundary/data rows are tiny and evaluated on every shard
+            lambda sp, xt, tb: pinn.residual_losses_stacked(
+                model, sp, xt, hw_noise, term_batches=tb),
             scfg, trainable_mask=mask)
     elif opt_name == "zo-signsgd":
         scfg = zoo.SPSAConfig(num_samples=args.zo_samples, mu=0.01)
@@ -222,11 +277,12 @@ def train_pinn(args):
         aux_name = "zo"
 
         @partial(jax.jit, donate_argnums=(0, 1))
-        def step_fn(params, aux, xt, bc, lr_t):
-            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise, bc=bc)
+        def step_fn(params, aux, xt, tb, lr_t):
+            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise,
+                                              term_batches=tb)
             blf = (None if args.sequential else
                    lambda sp: pinn.residual_losses_stacked(
-                       model, sp, xt, hw_noise, bc=bc))
+                       model, sp, xt, hw_noise, term_batches=tb))
             return zoo.zo_signsgd_step(lf, params, aux, lr=lr_t, cfg=scfg,
                                        batched_loss_fn=blf,
                                        trainable_mask=mask)
@@ -237,9 +293,10 @@ def train_pinn(args):
         aux_name = "opt"
 
         @partial(jax.jit, donate_argnums=(0, 1))
-        def step_fn(params, aux, xt, bc, lr_t):
+        def step_fn(params, aux, xt, tb, lr_t):
             # lr_t unused: the BP optimizers carry their own schedule
-            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise, bc=bc)
+            lf = lambda p: pinn.residual_loss(model, p, xt, hw_noise,
+                                              term_batches=tb)
             loss, grads = jax.value_and_grad(lf)(params)
             # the fixed buffers get nonzero BP gradients (they scale wires
             # elementwise) — zero them so the baseline can't walk the ±1
@@ -260,23 +317,30 @@ def train_pinn(args):
         except FileNotFoundError:
             pass
 
-    # restart-safe counter-based collocation stream (shared data pipeline)
+    # restart-safe counter-based streams (shared data pipeline): the
+    # collocation batch on shard 0, the boundary/data term batches on
+    # shard 1 of the same (seed, step) key space
     colloc = pde_collocation_iterator(args.batch, seed=args.seed,
                                       start_step=start_step, pde=args.pde,
                                       problem=problem_override,
                                       coeffs_per_step=args.coeffs_per_step)
+    terms = pde_term_batch_iterator(max(args.batch // 4, 8), seed=args.seed,
+                                    start_step=start_step, problem=problem)
+    multi_term = len(problem.loss_terms()) > 1
     for step in range(start_step, args.steps):
         xt = next(colloc)
-        bc = (problem.boundary_batch(
-                  jax.random.fold_in(jax.random.fold_in(key, 8), step),
-                  max(args.batch // 4, 8))
-              if problem.has_boundary_loss else None)
+        tb = next(terms)
         watchdog.start_step()
-        params, aux, loss = step_fn(params, aux, xt, bc,
+        params, aux, loss = step_fn(params, aux, xt, tb,
                                     lr0 * 0.5 ** (step / half_life))
         st = watchdog.end_step(step)
         if step % args.log_every == 0:
             msg = f"step {step} loss {float(loss):.4e} ({st.duration_s:.2f}s)"
+            if multi_term:
+                pt = pinn.per_term_losses(model, params, xt, hw_noise,
+                                          term_batches=tb)
+                msg += " [" + " ".join(f"{k}={float(v):.3e}"
+                                       for k, v in pt.items()) + "]"
             if val is not None:
                 msg += (" val MSE "
                         f"{float(pinn.validation_mse(model, params, val, hw_noise)):.4e}")
@@ -371,6 +435,17 @@ def main(argv=None):
                     help="grouped scenario sampling: C coefficient draws "
                          "per step tiled over the batch instead of "
                          "per-point iid")
+    ap.add_argument("--term-weight", action="append", default=None,
+                    metavar="NAME=W",
+                    help="override a loss term's scale weight by name "
+                         "(repeatable / comma-separated; names from the "
+                         "problem's loss_terms(), e.g. ic=10 data=0.5); "
+                         "recorded in checkpoint meta so serving rebuilds "
+                         "the trained loss")
+    ap.add_argument("--bc-weight", type=float, default=None,
+                    help="sugar for the boundary-kind term's weight "
+                         "(paper Eq. 4's λ — helmholtz-2d's boundary, "
+                         "ns-2d's ic); an explicit --term-weight wins")
     args = ap.parse_args(argv)
 
     if args.arch in PINN_ARCHS:

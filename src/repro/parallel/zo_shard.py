@@ -267,8 +267,10 @@ def make_distributed_zo_step(mesh: Mesh, batched_loss_fn,
     Returns ``step(params, state, xt, bc, lr) -> (params, state, loss)``:
     params/state replicated in and out, ``xt`` split over the batch axis
     (its leading dim must be divisible by the batch-axis size), ``bc``
-    replicated (the boundary term is O(batch/4) and evaluated identically
-    everywhere — see DESIGN.md §Distributed).  Rebuilding for a different
+    replicated LEAF-WISE — a legacy ``(xb, ub)`` boundary pair or the
+    composite-loss engine's ``{term_name: (x, target)}`` dict both thread
+    through unchanged (the boundary/data terms are O(batch/4) and
+    evaluated identically everywhere — see DESIGN.md §Distributed).  Rebuilding for a different
     mesh is the whole elastic-resize story: parameters are replicated, so
     nothing needs re-sharding (``runtime.elastic.ZOElasticController``).
     ``trainable_mask`` (replicated static structure) excludes fixed buffers

@@ -8,6 +8,14 @@ Importing this package registers the built-in workload suite:
   * ``black-scholes-100d``          — 100-dim Black–Scholes–Barenblatt,
   * ``helmholtz-2d``                — steady Helmholtz with a Dirichlet
                                       boundary loss (paper Eq. 4's L_b),
+  * ``ns-2d``                       — 2D incompressible Navier–Stokes
+                                      (vorticity form) on a periodic box,
+                                      Taylor–Green closed form; the first
+                                      problem with all three loss-term
+                                      kinds (collocation + initial-slice
+                                      boundary + noisy data fit), a
+                                      ``Domain`` normalization layer and
+                                      the exact periodic-spectral path,
 
 plus the coefficient-conditioned families (DESIGN.md §Parameterized
 families) — one checkpoint amortized over a sampled coefficient range,
@@ -22,16 +30,20 @@ verified against the per-coefficient closed forms:
 ``available()`` lists the registry.
 """
 
-from repro.pde.base import (CoeffSpec, PDEProblem, available,
+from repro.pde.base import (CoeffSpec, Domain, LossTerm, PDEProblem,
+                            available, estimate_for_problem,
                             estimate_from_u_stencil, fd_stencil_points,
                             get_problem, register)
-from repro.pde import black_scholes, heat, helmholtz, hjb  # noqa: F401 (register)
+from repro.pde import (black_scholes, heat, helmholtz, hjb,  # noqa: F401
+                       navier_stokes)                        # (register)
 from repro.pde.black_scholes import BlackScholesProblem
 from repro.pde.heat import HeatProblem
 from repro.pde.helmholtz import HelmholtzProblem
 from repro.pde.hjb import HJBProblem
+from repro.pde.navier_stokes import NavierStokes2D
 
-__all__ = ["CoeffSpec", "PDEProblem", "register", "get_problem",
-           "available", "fd_stencil_points", "estimate_from_u_stencil",
+__all__ = ["CoeffSpec", "Domain", "LossTerm", "PDEProblem", "register",
+           "get_problem", "available", "fd_stencil_points",
+           "estimate_from_u_stencil", "estimate_for_problem",
            "HJBProblem", "HeatProblem", "BlackScholesProblem",
-           "HelmholtzProblem"]
+           "HelmholtzProblem", "NavierStokes2D"]

@@ -11,7 +11,18 @@ derivative estimators (``repro.core.stein``) and the ZO optimizer
     terminal/initial condition into the network output,
   * the pointwise residual as a function of a ``DerivativeEstimate``
     (paper Eq. 4's L_r integrand),
-  * an optional boundary term (paper Eq. 4's L_b: sampler + target + weight),
+  * the composite loss as a tuple of ``LossTerm``s (``loss_terms()``):
+    one collocation (residual) term plus any number of boundary / data
+    terms, each with its own sampler, target and scale weight — paper
+    Eq. 4's L = L_r + λ·L_b generalized to L = Σ_k w_k·L_k.  The legacy
+    ``has_boundary_loss``/``bc_weight``/``boundary_batch`` trio is kept
+    as a deprecated shim that the default ``loss_terms()`` synthesizes
+    terms from,
+  * an optional ``Domain`` normalization layer: problems on a non-unit
+    box declare it once here, sample collocation in UNIT-box coordinates,
+    and the loss engine folds the analytic Jacobian factors into the
+    residual via ``scale_estimate`` — FD/spectral steps are taken in
+    normalized coordinates, the PDE is stated in raw ones,
   * an optional closed-form exact solution (validation MSE + tests).
 
 Contract for the fused multi-perturbation ZO hot path (DESIGN.md §PDE):
@@ -43,8 +54,113 @@ import numpy as np
 
 from repro.core import stein
 
-__all__ = ["CoeffSpec", "PDEProblem", "register", "get_problem",
-           "available", "fd_stencil_points", "estimate_from_u_stencil"]
+__all__ = ["CoeffSpec", "Domain", "LossTerm", "PDEProblem", "register",
+           "get_problem", "available", "fd_stencil_points",
+           "estimate_from_u_stencil", "estimate_for_problem"]
+
+
+# ------------------------------------------------------ domain normalization
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Axis-aligned box [lo, hi]^D mapped to the unit box at the registry
+    boundary.
+
+    A problem that declares a ``Domain`` samples collocation/boundary/data
+    rows in UNIT-box coordinates z = (x − lo) / (hi − lo): the network,
+    the FD stencils and the spectral line grids all operate on z (uniform
+    O(1) inputs, one shared step/extent convention across problems), while
+    the PDE residual is stated in raw coordinates x.  The chain rule is a
+    pure diagonal rescale — ∂_x = ∂_z / s, ∂²_x = ∂²_z / s² with
+    s = hi − lo per axis — which ``PDEProblem.scale_estimate`` folds into
+    every ``DerivativeEstimate`` before ``residual`` sees it.  Problems
+    with ``domain = None`` (all pre-existing ones) keep raw rows and the
+    identity scaling: that path is bit-identical to the pre-Domain stack.
+    """
+
+    lo: tuple
+    hi: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "lo", tuple(float(v) for v in self.lo))
+        object.__setattr__(self, "hi", tuple(float(v) for v in self.hi))
+        if len(self.lo) != len(self.hi):
+            raise ValueError("Domain lo/hi length mismatch")
+        if not self.lo:
+            raise ValueError("Domain needs at least one axis")
+        for a, b in zip(self.lo, self.hi):
+            if not a < b:
+                raise ValueError(f"Domain axis needs lo < hi, got [{a}, {b}]")
+
+    @property
+    def dim(self) -> int:
+        return len(self.lo)
+
+    @property
+    def scales(self) -> np.ndarray:
+        """(D,) per-axis Jacobian factors s = hi − lo of x = lo + s·z."""
+        return np.asarray(self.hi, dtype=np.float32) \
+            - np.asarray(self.lo, dtype=np.float32)
+
+    @property
+    def is_unit(self) -> bool:
+        return all(a == 0.0 and b == 1.0 for a, b in zip(self.lo, self.hi))
+
+    def from_unit(self, z: jax.Array) -> jax.Array:
+        """Unit-box rows (..., ≥D) → raw coordinates on the first D columns
+        (trailing coefficient slots pass through untouched)."""
+        lo = jnp.asarray(self.lo, dtype=z.dtype)
+        s = jnp.asarray(self.scales, dtype=z.dtype)
+        head = lo + s * z[..., :self.dim]
+        return jnp.concatenate([head, z[..., self.dim:]], axis=-1) \
+            if z.shape[-1] > self.dim else head
+
+    def to_unit(self, x: jax.Array) -> jax.Array:
+        """Inverse of ``from_unit``: raw rows → unit-box coordinates."""
+        lo = jnp.asarray(self.lo, dtype=x.dtype)
+        s = jnp.asarray(self.scales, dtype=x.dtype)
+        head = (x[..., :self.dim] - lo) / s
+        return jnp.concatenate([head, x[..., self.dim:]], axis=-1) \
+            if x.shape[-1] > self.dim else head
+
+
+# ------------------------------------------------------------ composite loss
+
+_TERM_KINDS = ("collocation", "boundary", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class LossTerm:
+    """One weighted term of the composite PINN loss L = Σ_k w_k·L_k.
+
+    ``kind`` fixes the assembly the loss engine (repro.core.pinn) applies:
+
+      * ``"collocation"`` — the PDE residual term: ``sample(key, n)``
+        draws interior rows and L_k = mean(residual²) through the
+        problem's derivative estimator.  Exactly one per problem.
+      * ``"boundary"`` — pointwise match on sampled boundary/initial rows:
+        ``sample(key, n) -> (xb, ub)`` and L_k = mean((u(xb) − ub)²)
+        (paper Eq. 4's L_b).
+      * ``"data"`` — same pointwise-match assembly on measured samples
+        ``(x_d, u_d)`` anywhere in the domain — the data-fitting term of
+        data-assimilating PINNs.  Kept as a distinct kind because the
+        rows mean something different (noisy observations, not exact
+        constraints) even though the math coincides.
+
+    ``weight`` is the term's scale w_k; ``sample`` is a counter-keyed
+    ``(key, n) -> batch`` sampler the trainer/data pipeline drives.
+    """
+
+    name: str
+    kind: str
+    weight: float = 1.0
+    sample: Callable | None = None
+
+    def __post_init__(self):
+        if self.kind not in _TERM_KINDS:
+            raise ValueError(f"unknown LossTerm kind {self.kind!r}; "
+                             f"expected one of {_TERM_KINDS}")
+        object.__setattr__(self, "weight", float(self.weight))
 
 
 # ------------------------------------------------------- coefficient families
@@ -167,20 +283,36 @@ class PDEProblem:
     """Base class: one PDE workload for the tensorized BP-free PINN stack.
 
     Subclasses set the class/instance attributes and implement the four
-    methods below.  ``residual_tol`` documents the problem's FD noise floor:
-    the mean-squared residual of the *exact* solution under the float32
-    central-difference estimator at ``fd_step`` (truncation h²·u⁗/12 plus
-    rounding ε·|u|/h², summed over the Laplacian) — tests assert it.
+    methods below.  ``residual_tol`` documents the problem's estimator
+    noise floor: the mean-squared residual of the *exact* solution under
+    BOTH the float32 central-difference estimator at ``fd_step``
+    (truncation h²·u⁗/12 plus rounding ε·|u|/h², summed over the
+    Laplacian) AND the problem's own declared ``estimator`` — the registry
+    smoke test asserts it for every problem via ``estimate_for_problem``.
     """
 
     name: str = ""
     space_dim: int = 0
     time_dependent: bool = True   # input is (x, t); False → input is x only
+    # Deprecated trio (pre-loss-term API): ``loss_terms()`` below
+    # synthesizes a "boundary"-kind term from it, so existing problems and
+    # callers keep working bit-identically.  New problems should override
+    # ``loss_terms()`` (or the has_*/weight attrs) instead.
     has_boundary_loss: bool = False
     bc_weight: float = 1.0        # λ in L = L_r + λ·L_b (paper Eq. 4)
+    # data-fitting term (kind="data"): noisy/measured samples of u fitted
+    # by the same pointwise-match assembly as the boundary term
+    has_data_loss: bool = False
+    data_weight: float = 1.0
     fd_step: float = 1e-2         # recommended FD step for this problem
     residual_tol: float = 5e-2    # documented FD noise floor (see above)
     coeff_spec: CoeffSpec | None = None  # set → coefficient-conditioned
+    domain: Domain | None = None  # set → samplers emit UNIT-box rows and
+    #                               the loss engine folds the Jacobian
+    #                               factors into every DerivativeEstimate
+    #                               (None keeps raw rows + identity scale —
+    #                               bit-identical legacy path)
+    _term_weights: dict = {}      # per-instance overrides, set_term_weights
 
     # Per-problem derivative-estimator choice (repro.core.pinn resolves
     # PINNConfig.deriv == "auto" to this; every shipped problem keeps
@@ -190,11 +322,12 @@ class PDEProblem:
     # derivatives by rfft; ``spectral_periodization`` picks how a
     # non-periodic box is made FFT-ready ("window" = C^∞ taper of
     # u − u(anchor) on an unwrapped line segment, "periodic" = raw rfft
-    # for genuinely periodic solutions).  See repro.core.spectral.
+    # for genuinely periodic solutions; a per-axis TUPLE mixes the two —
+    # e.g. ns-2d's periodic space × windowed time).  See repro.core.spectral.
     estimator: str = "fd"                 # "fd" | "stein" | "spectral"
     spectral_points: int = 16             # line-grid size M (per axis)
     spectral_extent: float = 1.0          # line length W (one FFT period)
-    spectral_periodization: str = "window"
+    spectral_periodization: str | tuple = "window"
 
     @property
     def in_dim(self) -> int:
@@ -263,11 +396,105 @@ class PDEProblem:
     def boundary_batch(self, key: jax.Array, n: int):
         """(xb, ub) boundary points + target values for L_b, or None.
 
-        Only meaningful when ``has_boundary_loss``; the trainer samples a
-        fresh batch per step and the loss adds
-        ``bc_weight · mean((u(xb) − ub)²)``.
+        Deprecated entry point (use ``loss_terms()``): only meaningful
+        when ``has_boundary_loss``; the trainer samples a fresh batch per
+        step and the loss adds ``bc_weight · mean((u(xb) − ub)²)``.
         """
         return None
+
+    def data_batch(self, key: jax.Array, n: int):
+        """(x_d, u_d) measured/observed sample rows + values for the
+        data-fitting term, or None.  Only meaningful when
+        ``has_data_loss``; must be deterministic per key (noise drawn
+        from the key), so the counter-based data pipeline replays the
+        same observations on restart."""
+        return None
+
+    # ------------------------------------------------------ composite loss
+    def loss_terms(self) -> tuple:
+        """The problem's composite loss as ``LossTerm``s, in evaluation
+        order: the collocation (residual) term first, then any boundary /
+        data terms.  The default synthesizes terms from the deprecated
+        ``has_boundary_loss``/``bc_weight``/``boundary_batch`` trio and
+        the data hooks, so legacy problems get the engine for free;
+        problems with richer structure override this (and should route
+        the result through ``_apply_term_weights`` so train-time
+        ``set_term_weights`` overrides keep working)."""
+        terms = [LossTerm("residual", "collocation", 1.0,
+                          self.sample_collocation)]
+        if self.has_boundary_loss:
+            terms.append(LossTerm("boundary", "boundary", self.bc_weight,
+                                  self.boundary_batch))
+        if self.has_data_loss:
+            terms.append(LossTerm("data", "data", self.data_weight,
+                                  self.data_batch))
+        return self._apply_term_weights(terms)
+
+    def _apply_term_weights(self, terms) -> tuple:
+        """Apply per-instance ``set_term_weights`` overrides to a term
+        list — the shared tail of every ``loss_terms`` implementation."""
+        ov = self._term_weights
+        if ov:
+            terms = [dataclasses.replace(t, weight=ov.get(t.name, t.weight))
+                     for t in terms]
+        return tuple(terms)
+
+    def set_term_weights(self, weights: dict) -> None:
+        """Override term weights by name at runtime (``--term-weight``):
+        unknown names raise.  Overrides are per-instance and serialized
+        into checkpoint meta (``term_weights()``), so serving/validation
+        reconstruct the trained loss exactly."""
+        known = {t.name for t in self.loss_terms()}
+        unknown = set(weights) - known
+        if unknown:
+            raise ValueError(f"unknown loss term(s) {sorted(unknown)}; "
+                             f"{self.name or type(self).__name__} has "
+                             f"{sorted(known)}")
+        merged = dict(self._term_weights)
+        merged.update({k: float(v) for k, v in weights.items()})
+        self._term_weights = merged
+
+    def term_weights(self) -> dict:
+        """Effective ``{name: weight}`` of ``loss_terms()`` — the
+        checkpoint-meta form (overrides applied)."""
+        return {t.name: t.weight for t in self.loss_terms()}
+
+    # ------------------------------------------------- domain normalization
+    def scale_estimate(self, est: stein.DerivativeEstimate
+                       ) -> stein.DerivativeEstimate:
+        """Fold the ``Domain`` Jacobian into a unit-box derivative
+        estimate: ∂_x = ∂_z / s, ∂²_x = ∂²_z / s² per active axis.  The
+        loss engine applies this before every ``residual`` call; with no
+        domain (or the unit box) the estimate is returned UNCHANGED — the
+        same object, so legacy computation graphs are bit-identical."""
+        if self.domain is None or self.domain.is_unit:
+            return est
+        s = jnp.asarray(self.domain.scales[:est.grad.shape[-1]],
+                        dtype=est.grad.dtype)
+        return stein.DerivativeEstimate(u=est.u, grad=est.grad / s,
+                                        hess_diag=est.hess_diag / (s * s))
+
+    # --------------------------------------------------- input feature map
+    def embed_features(self, xt: jax.Array):
+        """Optional input feature map (..., net_dim) → (..., feature_dim)
+        applied INSIDE the network embedding, before padding — e.g. the
+        Fourier features (cos 2πz, sin 2πz, …) that make a network exactly
+        periodic so the spectral estimator's ``"periodic"`` mode is valid.
+        Overriding disables the ``fd_fast`` rank-1 layer-1 trick (it
+        assumes an affine embedding); ``core.pinn`` resolves ``fd_fast``
+        to plain ``fd`` for such problems.  None (default) keeps the
+        legacy coeff-normalize + zero-pad embedding bit-identically."""
+        return None
+
+    @property
+    def feature_dim(self) -> int:
+        """Network input width after ``embed_features`` (net_dim when the
+        problem has no feature map)."""
+        return self.net_dim
+
+    @property
+    def has_feature_map(self) -> bool:
+        return type(self).embed_features is not PDEProblem.embed_features
 
     def exact_solution(self, xt: jax.Array) -> jax.Array | None:
         """Closed-form u(xt) for validation, or None if unknown."""
@@ -336,6 +563,40 @@ def uniform_box(key: jax.Array, n: int, dim: int, lo: float,
                 hi: float) -> jax.Array:
     """Uniform sample in [lo, hi]^dim — the common collocation primitive."""
     return jax.random.uniform(key, (n, dim), minval=lo, maxval=hi)
+
+
+def estimate_for_problem(problem: PDEProblem, f: Callable, xt: jax.Array,
+                         key: jax.Array | None = None,
+                         estimator: str | None = None
+                         ) -> stein.DerivativeEstimate:
+    """Derivative estimate of a callable u at rows ``xt`` under the
+    problem's DECLARED estimator (or an explicit override), with the
+    domain Jacobian folded in — the single dispatch the registry smoke
+    test, benchmarks and ad-hoc validation share, so "evaluate the
+    residual the way this problem is trained" is one call.
+
+    ``f(rows) -> values`` must accept arbitrarily-shaped leading axes
+    (the spectral path feeds line rows).  ``key`` is only consulted by
+    the stein estimator.
+    """
+    deriv = problem.estimator if estimator is None else estimator
+    if deriv == "spectral":
+        from repro.core import spectral as spectral_lib
+        est = spectral_lib.spectral_estimate(
+            f, xt, points=problem.spectral_points,
+            extent=problem.spectral_extent,
+            periodization=problem.spectral_periodization,
+            n_active=problem.in_dim, carrier=problem.spectral_carrier)
+    elif deriv == "stein":
+        if key is None:
+            raise ValueError("stein estimator needs a PRNG key")
+        est = stein.stein_estimate(f, xt, key, n_active=problem.in_dim)
+    elif deriv in ("fd", "fd_fast"):
+        est = stein.fd_estimate(f, xt, h=problem.fd_step,
+                                n_active=problem.in_dim)
+    else:
+        raise ValueError(f"unknown estimator {deriv!r}")
+    return problem.scale_estimate(est)
 
 
 # ------------------------------------------------------------------ registry

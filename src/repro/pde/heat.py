@@ -42,7 +42,8 @@ class HeatProblem(base.PDEProblem):
     # second differences, each carrying ~ε/h² = 1e-3 f32 rounding → the
     # mean-squared exact-solution residual sits near D·1e-6 ≲ 1e-3.  The
     # h²-truncation term is smaller (u⁗ ~ (4s)⁻² ≪ 1).  Conditioned rows
-    # scale that floor by κ² ≤ 4 over the default range — still ≪ tol.
+    # scale that floor by κ² ≤ 4 over the default range — still ≪ tol;
+    # the registry smoke test asserts the declared-estimator floor too.
     residual_tol = 1e-2
 
     def __init__(self, space_dim: int = 20, margin: float = 0.02,

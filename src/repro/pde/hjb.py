@@ -35,7 +35,8 @@ class HJBProblem(base.PDEProblem):
     time_dependent = True
     has_boundary_loss = False
     # float32 FD second derivatives carry ~ε·|u|/h² rounding per dim, summed
-    # over D Laplacian terms (the seed's exact-solution test bound).
+    # over D Laplacian terms (the seed's exact-solution test bound); the
+    # registry smoke test asserts it under the declared estimator too.
     residual_tol = 5e-2
 
     def __init__(self, space_dim: int = 20, margin: float = 0.02,

@@ -147,6 +147,18 @@ class SolverRegistry:
                     "is not coefficient-conditioned")
             problem.coeff_spec = pde_lib.CoeffSpec.from_meta(
                 meta["coeff_spec"])
+        if "term_weights" in meta:
+            # the trained loss composition (--term-weight/--bc-weight
+            # overrides) travels in the checkpoint: restore it so a
+            # validation pass through the loaded solver reproduces the
+            # trained loss exactly (DESIGN.md §Loss-terms)
+            if problem is None:
+                from repro import pde as pde_lib
+                problem = pde_lib.get_problem(cfg.pde)
+            known = {t.name for t in problem.loss_terms()}
+            problem.set_term_weights({k: v for k, v
+                                      in meta["term_weights"].items()
+                                      if k in known})
         model = pinn.TensorPinn(cfg, problem=problem)
         # init gives the restore target's tree structure/shapes; values are
         # overwritten by the checkpoint

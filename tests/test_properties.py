@@ -268,3 +268,106 @@ def test_flash_attention_property(h, kh_div, s, d, causal):
     o_k = ops.attention(q, k, v, causal=causal, mode="interpret")
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
                                atol=5e-5, rtol=5e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    dim=st.integers(1, 4),
+    tail=st.integers(0, 3),
+    batch=st.integers(1, 16),
+    lo=st.floats(-5.0, 5.0),
+    width=st.floats(0.1, 10.0),
+    seed=st.integers(0, 1000),
+)
+def test_domain_roundtrip_property(dim, tail, batch, lo, width, seed):
+    """Property: ``to_unit ∘ from_unit`` is the identity on the unit box
+    (and the inverse composition on the raw box) for any axis-aligned
+    geometry, with trailing coefficient columns passing through UNTOUCHED
+    (bit-equal) — the Domain normalization contract."""
+    from repro.pde import Domain
+    rs = np.random.RandomState(seed)
+    lo_v = lo + rs.rand(dim) * 2.0
+    dom = Domain(tuple(lo_v), tuple(lo_v + width * (1.0 + rs.rand(dim))))
+    assert dom.dim == dim and not dom.is_unit
+    z = jax.random.uniform(jax.random.PRNGKey(seed), (batch, dim + tail))
+    x = dom.from_unit(z)
+    z_back = dom.to_unit(x)
+    np.testing.assert_allclose(np.asarray(z_back)[:, :dim],
+                               np.asarray(z)[:, :dim], atol=1e-5)
+    if tail:
+        np.testing.assert_array_equal(np.asarray(x)[:, dim:],
+                                      np.asarray(z)[:, dim:])
+        np.testing.assert_array_equal(np.asarray(z_back)[:, dim:],
+                                      np.asarray(z)[:, dim:])
+    x2 = dom.from_unit(z_back)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dom.scales),
+                               np.asarray(dom.hi) - np.asarray(dom.lo),
+                               rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    dim=st.integers(1, 3),
+    a=st.floats(0.5, 2.0),
+    width=st.floats(0.5, 3.0),
+    batch=st.integers(1, 16),
+    seed=st.integers(0, 1000),
+)
+def test_domain_scaled_fd_matches_analytic_property(dim, a, width, batch,
+                                                    seed):
+    """Property: unit-box FD derivatives of f ∘ from_unit, Jacobian-scaled
+    by ``scale_estimate``, reproduce the ANALYTIC raw-coordinate
+    derivatives of f within the documented FD floor (truncation
+    h²/6·|f⁗|·s² after scaling, plus ε/h² rounding) — the chain-rule
+    identity the ns-2d residual rides on."""
+    from repro.core import stein
+    from repro.pde import Domain, PDEProblem
+
+    rs = np.random.RandomState(seed)
+    lo = tuple(rs.randn(dim))
+    dom = Domain(lo, tuple(l + width for l in lo))
+
+    class _Box(PDEProblem):
+        domain = dom
+    prob = _Box()
+
+    f_raw = lambda x: jnp.sum(jnp.sin(a * x), axis=-1)
+    z = jax.random.uniform(jax.random.PRNGKey(seed), (batch, dim),
+                           minval=0.1, maxval=0.9)
+    est = stein.fd_estimate(lambda q: f_raw(dom.from_unit(q)), z, h=1e-2)
+    scaled = prob.scale_estimate(est)
+    assert scaled is not est            # non-unit box: a NEW estimate
+    raw = dom.from_unit(z)
+    np.testing.assert_allclose(np.asarray(scaled.u),
+                               np.asarray(f_raw(raw)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(scaled.grad),
+                               np.asarray(a * jnp.cos(a * raw)), atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(scaled.hess_diag),
+        np.asarray(-a * a * jnp.sin(a * raw)), atol=1e-2)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    seed=st.integers(0, 1000),
+    k=st.integers(0, 5),
+    n=st.integers(4, 32),
+)
+def test_term_batch_iterator_counter_keyed_property(seed, k, n):
+    """Property: ``pde_term_batch_iterator`` is a pure function of
+    (seed, step): restarting at ``start_step=k`` replays EXACTLY the
+    stream a fresh iterator produces after k steps (bit-equal points,
+    targets, and data noise) — the restart-safety contract shared with
+    the collocation stream."""
+    from repro.data import pde_term_batch_iterator
+    it = pde_term_batch_iterator(n, seed=seed, pde="ns-2d")
+    for _ in range(k):
+        next(it)
+    resumed = next(pde_term_batch_iterator(n, seed=seed, start_step=k,
+                                           pde="ns-2d"))
+    ahead = next(it)
+    assert set(ahead) == set(resumed) == {"ic", "data"}
+    for name in ahead:
+        for got, want in zip(resumed[name], ahead[name]):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
